@@ -1,0 +1,215 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Graphs are R-MAT stand-ins
+shaped like the paper's Table 4.1 datasets (scaled to CPU budgets; pass
+--scale to change).  Tables covered:
+
+  * Table 4.6/4.7 (sequential optimization ladder) -> bench_census_versions
+  * Table 4.8/4.12 (load-balance strategies)       -> bench_balance
+  * Table 4.13/Fig 4.8 (strong scaling)            -> bench_scaling
+  * Table 3.1 'Synch.' row (decoupled vs shared)   -> bench_accumulators
+  * §5 GPU kernel + Table 5.11 (shared-mem census) -> bench_kernel
+  * LM-side step benches (framework)               -> bench_lm_smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, *args, reps=3, warmup=1):
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(reps):
+        out = fn(*args)
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def bench_census_versions(scale: float):
+    """Paper Tables 4.6/4.7: the optimization ladder, TPU-translated.
+
+    v0.4: precomputed dyad code (4 probes/candidate) = production path;
+    v0.1-like: dyad code re-derived per candidate (6 probes);
+    v0.5 analogue: degree bucketing in the Pallas kernel path.
+    """
+    import math
+    from repro.core import generators, triad_census
+    from repro.core.census import (canonical_dyads, make_census_batch_fn,
+                                   make_member_fn, pad_dyads)
+
+    g = generators.paper_profile("slashdot", scale_down=64 / scale)
+    u, v = canonical_dyads(g)
+    uu, vv, valid = pad_dyads(u, v, 256)
+
+    K = max(1, g.max_deg)
+    iters = max(1, math.ceil(math.log2(max(g.max_deg, g.max_out_deg, 1) + 1))) + 1
+
+    def scan_fn(batch_fn):
+        @jax.jit
+        def run(arrays, n, us, vs, va):
+            steps = us.shape[0] // 256
+
+            def body(c, xs):
+                a, b, m = xs
+                return c, batch_fn(arrays, n, a, b, m)
+
+            _, parts = jax.lax.scan(
+                body, 0, (us.reshape(steps, 256), vs.reshape(steps, 256),
+                          va.reshape(steps, 256)))
+            return parts
+
+        return run
+
+    four = scan_fn(make_census_batch_fn(K, iters))
+    six = scan_fn(make_census_batch_fn(K, iters, six_probe=True))
+    args = (g.arrays, jnp.int32(g.n), jnp.asarray(uu), jnp.asarray(vv),
+            jnp.asarray(valid))
+    t_modern = _timeit(lambda: four(*args))
+    t_naive = _timeit(lambda: six(*args))
+    print(f"census_v04_precomputed_code,{t_modern:.0f},speedup_vs_6probe="
+          f"{t_naive / t_modern:.2f}x")
+
+    from repro.kernels.ops import triad_census_kernel
+    t_flat = _timeit(lambda: triad_census_kernel(
+        g, block=32, buckets=(max(g.max_deg, 1),)), reps=1)
+    t_bucket = _timeit(lambda: triad_census_kernel(
+        g, block=32, buckets=(32, 128, 512)), reps=1)
+    print(f"census_kernel_bucketed,{t_bucket:.0f},speedup_vs_flat="
+          f"{t_flat / max(t_bucket, 1e-9):.2f}x")
+
+
+def bench_balance(scale: float):
+    """Paper Tables 4.8/4.12: strategy quality + packing cost."""
+    from repro.core import exact_s_sizes, generators, pack_tasks
+    from repro.core.census import canonical_dyads
+
+    g = generators.paper_profile("slashdot", scale_down=64 / scale)
+    for strat in ("greedy_sequential", "sorted_snake", "greedy_lpt"):
+        for wm in ("canonical_uniform", "canonical_nonuniform"):
+            t0 = time.perf_counter()
+            t = pack_tasks(g, 64, weight_model=wm, strategy=strat)
+            dt = (time.perf_counter() - t0) * 1e6
+            print(f"balance_{strat}_{wm},{dt:.0f},imbalance={t.imbalance:.4f}")
+    u, v = canonical_dyads(g)
+    m = (min(len(u), 20_000) // 1024) * 1024
+    t_host = _timeit(lambda: exact_s_sizes(g, u[:m], v[:m], device=False),
+                     reps=1, warmup=0)
+    t_dev = _timeit(lambda: exact_s_sizes(g, u[:m], v[:m], device=True),
+                    reps=2, warmup=1)
+    print(f"exact_s_host_sequential,{t_host:.0f},paper_v06_bottleneck")
+    print(f"exact_s_device_vectorized,{t_dev:.0f},speedup="
+          f"{t_host / max(t_dev, 1e-9):.1f}x")
+
+
+def bench_accumulators(scale: float):
+    """Table 3.1 'Synch.' row: decoupled per-worker census arrays vs a
+    single shared array updated serially (the TPU stand-in for atomics)."""
+    from repro.core import generators
+    from repro.core.census import canonical_dyads, make_census_fn, pad_dyads
+
+    g = generators.paper_profile("slashdot", scale_down=64 / scale)
+    u, v = canonical_dyads(g)
+    uu, vv, valid = pad_dyads(u, v, 256)
+    fn = make_census_fn(g, batch=256)
+    args = (g.arrays, jnp.int32(g.n), jnp.asarray(uu), jnp.asarray(vv),
+            jnp.asarray(valid))
+    t_dec = _timeit(lambda: np.asarray(fn(*args)).sum(0))
+
+    @jax.jit
+    def shared(arrays, n, us, vs, va):
+        parts = fn(arrays, n, us, vs, va)
+
+        def body(c, p):
+            return c.at[:].add(p), None
+
+        out, _ = jax.lax.scan(body, jnp.zeros(16, jnp.int32), parts)
+        return out
+
+    t_sh = _timeit(lambda: shared(*args))
+    print(f"census_decoupled_accumulators,{t_dec:.0f},vs_shared="
+          f"{t_sh / max(t_dec, 1e-9):.2f}x")
+
+
+def bench_scaling(scale: float):
+    """Fig 4.8 strong scaling: modeled per-shard work vs worker count."""
+    from repro.core import generators, pack_tasks
+
+    g = generators.paper_profile("amazon", scale_down=64 / scale)
+    base = None
+    for T in (1, 2, 4, 8, 16, 32, 64, 128):
+        t = pack_tasks(g, T, strategy="sorted_snake")
+        work = t.weights.max()
+        base = base or work
+        print(f"scaling_T{T},{work:.0f},speedup={base / work:.2f}x"
+              f",imbalance={t.imbalance:.3f}")
+
+
+def bench_kernel(scale: float):
+    """§5.4/Table 5.11: the census kernel (VMEM census per block ~ GPU
+    shared-memory census per thread block) vs the XLA binary-search path.
+    NOTE: kernel timings on CPU are interpret-mode (python) — structural
+    only; real comparisons need a TPU."""
+    from repro.core import generators, triad_census
+    from repro.kernels.ops import triad_census_kernel
+
+    g = generators.paper_profile("eatSR", scale_down=64 / scale)
+    t_xla = _timeit(lambda: triad_census(g, batch=256).counts, reps=1)
+    t_krn = _timeit(lambda: triad_census_kernel(g, block=32,
+                                                buckets=(64, 256)), reps=1)
+    print(f"census_xla_binary_search,{t_xla:.0f},cpu_wallclock")
+    print(f"census_pallas_kernel,{t_krn:.0f},interpret_mode_structural_only")
+
+
+def bench_lm_smoke(scale: float):
+    """Framework-side: smoke-scale train-step latency per arch."""
+    from repro.config import RunConfig, get_config, list_configs
+    from repro.models import transformer as tfm
+    from repro.train import adamw_init, make_train_step
+
+    run = RunConfig(attention_impl="chunked_causal", attention_chunk=16,
+                    remat="none")
+    for arch in list_configs():
+        cfg = get_config(arch, smoke=True)
+        params = tfm.init_model(cfg, jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+        step = jax.jit(make_train_step(cfg, run))
+        batch = {"tokens": jnp.zeros((2, 33), jnp.int32)}
+        if cfg.n_prefix_embeds:
+            batch["prefix_embeds"] = jnp.zeros(
+                (2, cfg.n_prefix_embeds, cfg.d_model), jnp.bfloat16)
+        t = _timeit(lambda: step(params, opt, batch)[2]["loss"])
+        print(f"lm_train_step_smoke_{arch},{t:.0f},B2xT32")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="graph size multiplier (1.0 = CPU-sized)")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    benches = {
+        "census_versions": bench_census_versions,
+        "balance": bench_balance,
+        "accumulators": bench_accumulators,
+        "scaling": bench_scaling,
+        "kernel": bench_kernel,
+        "lm_smoke": bench_lm_smoke,
+    }
+    only = [s for s in args.only.split(",") if s]
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        fn(args.scale)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from .base import (MLAConfig, MoEConfig, ModelConfig, RWKVConfig, RunConfig,
+                   SSMConfig, ShapeConfig, SHAPES)
+from .registry import get_config, list_configs, register
+
+__all__ = [
+    "MLAConfig", "MoEConfig", "ModelConfig", "RWKVConfig", "RunConfig",
+    "SSMConfig", "ShapeConfig", "SHAPES", "get_config", "list_configs",
+    "register",
+]

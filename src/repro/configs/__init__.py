@@ -1,0 +1,2 @@
+"""Assigned architecture configs (one module per arch) + paper census configs."""
+from ..config.registry import ARCH_MODULES, get_config, list_configs  # noqa: F401

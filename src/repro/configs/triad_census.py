@@ -1,0 +1,35 @@
+"""The paper's own experiment configs (Table 4.1 datasets as census jobs).
+
+These parameterize launch/census_dryrun.py and examples/triad_census_sna.py;
+on a real cluster point ``path`` at the actual Pajek/SNAP files and the
+loader in core.graph takes over from the R-MAT stand-ins.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from ..core.generators import PAPER_DATASETS
+
+
+@dataclasses.dataclass(frozen=True)
+class CensusJobConfig:
+    dataset: str
+    n_vertices: int
+    n_arcs: int
+    directed: bool
+    path: Optional[str] = None  # real dataset file (Pajek / edge list)
+    strategy: str = "sorted_snake"
+    weight_model: str = "canonical_uniform"
+    batch: int = 256
+    buckets: tuple = (64, 256, 1024)  # degree-bucket tile widths
+
+
+CENSUS_JOBS: dict[str, CensusJobConfig] = {
+    name: CensusJobConfig(dataset=name, n_vertices=n, n_arcs=m, directed=d)
+    for name, (n, m, d) in PAPER_DATASETS.items()
+}
+
+
+def get_census_job(name: str) -> CensusJobConfig:
+    return CENSUS_JOBS[name]

@@ -1,0 +1,193 @@
+"""Graph partitioning & load balancing for irregular dyad workloads.
+
+This module reproduces the paper's Table 4.8 strategy space and then goes
+beyond it.  The paper's task abstraction is the **canonical dyad**
+``(u, v), u < v``; a task's cost is the size of its candidate set.  Two cost
+models from the paper:
+
+  * ``canonical_uniform``      — ``|N(u)| + |N(v)| − 2`` (v0.7; cheap, the
+    ``−2`` refinement over the Cray-XMT work is Table 4.12's contribution),
+  * ``canonical_nonuniform``   — exact ``|S| = |N(u) ∪ N(v) \\ {u,v}|``
+    (v0.6; precise but its *sequential host pre-computation dominated
+    runtime* — Table 4.9's Amdahl wall).
+
+And three packing disciplines:
+
+  * ``greedy_sequential``  — the paper's queue fill: walk dyads in natural
+    order, open a new queue when the running weight exceeds the quota.
+    Faithful baseline; produces ragged queues (padded here).
+  * ``sorted_snake``       — beyond-paper: sort by weight descending, deal
+    into shards boustrophedon.  Equal task *counts* per shard (static-shape
+    friendly for SPMD) and near-optimal weight balance at O(D log D) host
+    cost, or fully on device.
+  * ``greedy_lpt``         — classic Longest-Processing-Time bin packing
+    (best balance, slowest packing; upper-bounds what balancing can buy).
+
+On TPU the non-uniform weights are computed **on device** with the same
+vectorized membership machinery as the census itself, removing the paper's
+pre-processing bottleneck — we quantify that in benchmarks/bench_balance.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .census import canonical_dyads, make_member_fn, _gather_neighborhood
+from .graph import CSRGraph
+
+WEIGHTS = ("vertex", "dyad_uniform", "canonical_uniform", "canonical_nonuniform")
+PACKING = ("greedy_sequential", "sorted_snake", "greedy_lpt")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedTasks:
+    """Static, per-shard dyad tasks: everything SPMD needs."""
+
+    u: np.ndarray  # (T, L) int32
+    v: np.ndarray  # (T, L) int32
+    valid: np.ndarray  # (T, L) bool
+    weights: np.ndarray  # (T,) float64 — modeled per-shard work
+    strategy: str
+    weight_model: str
+
+    @property
+    def imbalance(self) -> float:
+        """max/mean modeled work — 1.0 is perfect."""
+        mean = self.weights.mean()
+        return float(self.weights.max() / mean) if mean > 0 else 1.0
+
+
+def dyad_weights(g: CSRGraph, u: np.ndarray, v: np.ndarray, model: str,
+                 batch: int = 1024) -> np.ndarray:
+    """Per-task cost under the given model (paper Table 4.8)."""
+    deg = np.asarray(g.arrays.nbr_deg)
+    if model == "vertex":
+        # per-vertex partitioning assigns all dyads of u together; weight 1.
+        return np.ones(len(u), dtype=np.float64)
+    if model == "dyad_uniform":
+        return np.ones(len(u), dtype=np.float64)
+    if model == "canonical_uniform":
+        return (deg[u] + deg[v] - 2).astype(np.float64)
+    if model == "canonical_nonuniform":
+        return exact_s_sizes(g, u, v, batch=batch).astype(np.float64)
+    raise ValueError(f"unknown weight model {model!r}")
+
+
+@functools.lru_cache(maxsize=32)
+def _s_batch_fn(K: int, iters: int):
+    member = make_member_fn(iters)
+
+    @jax.jit
+    def s_batch(arrays, uu, vv):
+        wu, mu, _ = _gather_neighborhood(arrays, uu, K)
+        wv, mv, _ = _gather_neighborhood(arrays, vv, K)
+        mu = mu & (wu != vv[:, None])
+        mv = mv & (wv != uu[:, None])
+        dup = member(arrays.nbr_ptr, arrays.nbr_idx, uu[:, None], wv)
+        return mu.sum(1) + (mv & ~dup).sum(1)
+
+    return s_batch
+
+
+def exact_s_sizes(g: CSRGraph, u: np.ndarray, v: np.ndarray, batch: int = 1024,
+                  device: bool = True) -> np.ndarray:
+    """|S| per dyad.  ``device=True`` uses the vectorized JAX path (ours);
+    ``device=False`` mimics the paper's sequential host pre-computation."""
+    if not device:
+        nbr_ptr = np.asarray(g.arrays.nbr_ptr)
+        nbr_idx = np.asarray(g.arrays.nbr_idx)
+        out = np.empty(len(u), dtype=np.int64)
+        for i, (a, b) in enumerate(zip(u, v)):
+            na = nbr_idx[nbr_ptr[a]: nbr_ptr[a + 1]]
+            nb = nbr_idx[nbr_ptr[b]: nbr_ptr[b + 1]]
+            s = np.union1d(na, nb)
+            out[i] = len(s) - np.isin([a, b], s).sum()
+        return out
+
+    K = max(1, g.max_deg)
+    iters = max(1, math.ceil(math.log2(g.max_deg + 1))) + 1
+    s_batch = _s_batch_fn(K, iters)
+
+    d = len(u)
+    pad = (-d) % batch
+    uu = np.concatenate([u, np.zeros(pad, u.dtype)]).astype(np.int32)
+    vv = np.concatenate([v, np.ones(pad, v.dtype)]).astype(np.int32)
+    outs = []
+    for i in range(0, len(uu), batch):
+        outs.append(np.asarray(s_batch(g.arrays, jnp.asarray(uu[i:i + batch]),
+                                       jnp.asarray(vv[i:i + batch]))))
+    return np.concatenate(outs)[:d].astype(np.int64)
+
+
+def _pad_shards(shards: list[np.ndarray], u, v):
+    L = max((len(s) for s in shards), default=1) or 1
+    T = len(shards)
+    su = np.zeros((T, L), np.int32)
+    sv = np.ones((T, L), np.int32)
+    mask = np.zeros((T, L), bool)
+    for t, s in enumerate(shards):
+        su[t, : len(s)] = u[s]
+        sv[t, : len(s)] = v[s]
+        mask[t, : len(s)] = True
+    return su, sv, mask
+
+
+def pack_tasks(g: CSRGraph, n_shards: int, *, weight_model: str = "canonical_uniform",
+               strategy: str = "sorted_snake", pad_multiple: int = 1) -> ShardedTasks:
+    """Partition all canonical dyads into ``n_shards`` balanced static shards."""
+    u, v = canonical_dyads(g)
+    w = dyad_weights(g, u, v, weight_model)
+    D = len(u)
+    idx = np.arange(D)
+
+    if strategy == "greedy_sequential":
+        # Paper Fig 4.4/4.5: fill queues in natural order until quota reached.
+        quota = w.sum() / n_shards
+        shards: list[list[int]] = [[] for _ in range(n_shards)]
+        t, acc = 0, 0.0
+        for i in idx:
+            shards[t].append(i)
+            acc += w[i]
+            if acc > quota and t + 1 < n_shards:
+                t, acc = t + 1, 0.0
+        shard_idx = [np.array(s, dtype=np.int64) for s in shards]
+    elif strategy == "sorted_snake":
+        order = np.argsort(-w, kind="stable")
+        rounds = math.ceil(D / n_shards)
+        pos = np.arange(D)
+        r, c = pos // n_shards, pos % n_shards
+        col = np.where(r % 2 == 0, c, n_shards - 1 - c)
+        shard_of = np.empty(D, dtype=np.int64)
+        shard_of[order] = col
+        shard_idx = [idx[shard_of == t] for t in range(n_shards)]
+    elif strategy == "greedy_lpt":
+        import heapq
+
+        order = np.argsort(-w, kind="stable")
+        heap = [(0.0, t) for t in range(n_shards)]
+        heapq.heapify(heap)
+        shards = [[] for _ in range(n_shards)]
+        for i in order:
+            load, t = heapq.heappop(heap)
+            shards[t].append(i)
+            heapq.heappush(heap, (load + w[i], t))
+        shard_idx = [np.array(s, dtype=np.int64) for s in shards]
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+
+    su, sv, mask = _pad_shards(shard_idx, u, v)
+    if pad_multiple > 1:
+        L = su.shape[1]
+        pad = (-L) % pad_multiple
+        if pad:
+            su = np.pad(su, ((0, 0), (0, pad)))
+            sv = np.pad(sv, ((0, 0), (0, pad)), constant_values=1)
+            mask = np.pad(mask, ((0, 0), (0, pad)))
+    loads = np.array([w[s].sum() for s in shard_idx])
+    return ShardedTasks(u=su, v=sv, valid=mask, weights=loads,
+                        strategy=strategy, weight_model=weight_model)

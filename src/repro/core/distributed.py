@@ -1,0 +1,93 @@
+"""Multi-pod distributed Triad Census via ``jax.shard_map``.
+
+Maps the paper's parallelization (one task queue per hardware thread,
+decoupled per-thread census arrays, single final merge) onto an SPMD mesh:
+
+  * every mesh device receives one **static task shard** from
+    :mod:`repro.core.balance` (the task-queue analogue),
+  * the graph CSR is replicated (the paper's shared-memory model),
+  * each device accumulates a private 16-bin census (the decoupled local
+    census array) and a single ``psum`` over all mesh axes performs the
+    paper's end-of-run merge — the only communication in the whole job.
+
+The collective schedule is therefore exactly one 64-byte all-reduce, which
+is why the census is compute-bound at any pod size (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from . import balance
+from .census import CensusResult, make_census_batch_fn
+from .graph import CSRGraph
+
+
+def make_distributed_census_fn(g: CSRGraph, mesh: jax.sharding.Mesh, *,
+                               batch: int = 256, K: int | None = None,
+                               acc_dtype=jnp.int32):
+    """Build a shard_map'd census over every device of ``mesh``.
+
+    The returned jitted fn takes ``(graph_arrays, n, tasks_u, tasks_v,
+    valid)`` with task arrays shaped ``(n_devices, L)`` (L a multiple of
+    ``batch``) and returns the merged ``(16,)`` connected/dyadic census.
+    """
+    K = K or max(1, g.max_deg)
+    member_iters = max(1, math.ceil(math.log2(max(g.max_deg, g.max_out_deg, 1) + 1))) + 1
+    batch_fn = make_census_batch_fn(K, member_iters, acc_dtype)
+    axes = tuple(mesh.axis_names)
+
+    def device_census(arrays, n, u, v, valid):
+        # u, v, valid: (1, L) local block — one task shard per device.
+        u, v, valid = u[0], v[0], valid[0]
+        steps = u.shape[0] // batch
+
+        def step(carry, xs):
+            uu, vv, va = xs
+            return carry + batch_fn(arrays, n, uu, vv, va), None
+
+        init = jax.lax.pvary(jnp.zeros((16,), acc_dtype), axes)
+        counts, _ = jax.lax.scan(
+            step, init,
+            (u.reshape(steps, batch), v.reshape(steps, batch),
+             valid.reshape(steps, batch)),
+        )
+        # the paper's final merge: one tree-reduction over all workers.
+        for ax in axes:
+            counts = jax.lax.psum(counts, ax)
+        return counts
+
+    shmap = jax.shard_map(
+        device_census,
+        mesh=mesh,
+        in_specs=(P(), P(), P(axes), P(axes), P(axes)),
+        out_specs=P(),
+    )
+    return jax.jit(shmap)
+
+
+def distributed_triad_census(
+    g: CSRGraph,
+    mesh: jax.sharding.Mesh,
+    *,
+    weight_model: str = "canonical_uniform",
+    strategy: str = "sorted_snake",
+    batch: int = 256,
+    K: int | None = None,
+) -> tuple[CensusResult, balance.ShardedTasks]:
+    """Partition, balance, and run the census over all devices of ``mesh``."""
+    n_dev = math.prod(mesh.devices.shape)
+    tasks = balance.pack_tasks(g, n_dev, weight_model=weight_model,
+                               strategy=strategy, pad_multiple=batch)
+    fn = make_distributed_census_fn(g, mesh, batch=batch, K=K)
+    counts = fn(g.arrays, jnp.int32(g.n), jnp.asarray(tasks.u),
+                jnp.asarray(tasks.v), jnp.asarray(tasks.valid))
+    counts = np.asarray(counts, dtype=np.int64)
+    total = g.n * (g.n - 1) * (g.n - 2) // 6
+    counts[0] = total - int(counts.sum())
+    return CensusResult(counts=counts), tasks

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticTokens, TokenFileDataset
+
+__all__ = ["SyntheticTokens", "TokenFileDataset"]

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+* triad_census — the paper's inner loop as dense VMEM tile compares
+* flash_attention — LM prefill attention with VMEM-resident softmax state
+
+Each kernel ships with ops.py (jit wrapper) and ref.py (pure-jnp oracle);
+tests sweep shapes/dtypes in interpret mode against the oracles.
+"""
+from . import ops, ref  # noqa: F401

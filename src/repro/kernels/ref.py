@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.triad_table import TRIAD_TABLE_64
+
+
+def census_tiles_ref(out_u, in_u, out_v, in_v, nbr_u, nbr_v, u, v, n,
+                     sentinel=jnp.int32(2**30)):
+    """Oracle for the triad-census tile kernel.
+
+    All tile args: (D, K) int32 padded with ``sentinel``; u, v: (D,).
+    Returns (16,) int64-safe int32 histogram of dyadic+connected triads
+    (null triads come from the closed form outside).
+    """
+
+    def member(cand, rows):
+        return (cand[:, :, None] == rows[:, None, :]).any(-1)
+
+    valid_u = nbr_u != sentinel
+    valid_v = nbr_v != sentinel
+    # S = N(u) ∪ N(v) \ {u, v}
+    mu = valid_u & (nbr_u != v[:, None])
+    mv = valid_v & (nbr_v != u[:, None])
+    dup = member(nbr_v, nbr_u) & mv
+    mv_only = mv & ~dup
+    s_size = mu.sum(1) + mv_only.sum(1)
+
+    e_uv = member(v[:, None], out_u)[:, 0]
+    e_vu = member(u[:, None], out_v)[:, 0]
+    dyad_code = e_uv.astype(jnp.int32) + 2 * e_vu.astype(jnp.int32)
+    dyad_type = jnp.where(dyad_code == 3, 2, 1)
+    dyadic = n - s_size - 2
+
+    def codes(cand, canon):
+        c = dyad_code[:, None]
+        c = c + 4 * member(cand, out_u).astype(jnp.int32)
+        c = c + 8 * member(cand, in_u).astype(jnp.int32)
+        c = c + 16 * member(cand, out_v).astype(jnp.int32)
+        c = c + 32 * member(cand, in_v).astype(jnp.int32)
+        t = jnp.asarray(TRIAD_TABLE_64)[c]
+        return jnp.where(canon, t, 0), canon
+
+    canon_u = mu & (nbr_u > v[:, None])
+    canon_v = mv_only & ((nbr_v > v[:, None]) |
+                         ((nbr_v > u[:, None]) & (nbr_v < v[:, None])))
+    t_u, m_u = codes(nbr_u, canon_u)
+    t_v, m_v = codes(nbr_v, canon_v)
+    counts = jnp.zeros(16, jnp.int32)
+    counts = counts.at[t_u.reshape(-1)].add(m_u.reshape(-1).astype(jnp.int32))
+    counts = counts.at[t_v.reshape(-1)].add(m_v.reshape(-1).astype(jnp.int32))
+    counts = counts.at[0].set(0)
+    counts = counts + jnp.zeros(16, jnp.int32).at[dyad_type].add(dyadic)
+    return counts
+
+
+def flash_attention_ref(q, k, v, q_pos, kv_pos, window=None):
+    """Dense causal (optionally windowed) GQA attention oracle.
+
+    q: (B, T, H, D); k/v: (B, S, Hkv, D); positions: (B, T)/(B, S).
+    """
+    B, T, H, D = q.shape
+    Hkv = k.shape[2]
+    qg = q.reshape(B, T, Hkv, H // Hkv, D)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    mask = kv_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        mask &= kv_pos[:, None, :] > q_pos[:, :, None] - window
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bskd->btkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, T, H, D).astype(q.dtype)

@@ -1,0 +1,115 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run + roofline for the paper's technique itself: the distributed
+Triad Census on the production mesh (the §Perf cell 'most representative
+of the paper').
+
+    PYTHONPATH=src python -m repro.launch.census_dryrun \
+        --dataset patents [--multi-pod] [--buckets 0|1] [--strategy ...]
+
+Unlike the LM cells the census runs the REAL paper workload shape: the
+full-size Table 4.1 graph profile (no scale-down) with static dyad shards.
+Since tile width K is the padding knob, ``--K`` sweeps the compute term
+directly (HLO FLOPs ∝ sum of per-bucket D_i x K_i).
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import math  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from .. import core  # noqa: E402
+from ..core import balance, generators  # noqa: E402
+from ..core.census import make_census_batch_fn  # noqa: E402
+from . import roofline  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="patents")
+    ap.add_argument("--scale-down", type=float, default=1.0)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--strategy", default="sorted_snake")
+    ap.add_argument("--weights", default="canonical_uniform")
+    ap.add_argument("--K", type=int, default=0, help="tile width override")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--synthetic-stats", action="store_true",
+                    help="skip graph build; use shape-only stand-in stats")
+    ap.add_argument("--out", default="experiments/census")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    n_dev = math.prod(mesh.devices.shape)
+
+    # Build (or model) the dyad workload.  For the full Patents graph the
+    # host-side numpy build is expensive on 1 CPU; --scale-down shrinks the
+    # graph but we keep per-device work constant by scaling tasks/device.
+    g = generators.paper_profile(args.dataset, scale_down=args.scale_down)
+    u, v = core.canonical_dyads(g)
+    tasks = balance.pack_tasks(g, n_dev, weight_model=args.weights,
+                               strategy=args.strategy,
+                               pad_multiple=args.batch)
+    K = args.K or max(1, g.max_deg)
+    member_iters = max(1, math.ceil(math.log2(max(g.max_deg, 1) + 1))) + 1
+    fn = core.make_distributed_census_fn(g, mesh, batch=args.batch, K=K)
+
+    with mesh:
+        lowered = jax.jit(fn).lower(
+            jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                         g.arrays),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            *(jax.ShapeDtypeStruct(t.shape, jnp.int32 if t.dtype != bool
+                                   else jnp.bool_)
+              for t in (tasks.u, tasks.v, tasks.valid)))
+        compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    print(ma)
+
+    meta = {
+        "arch": f"census-{args.dataset}", "shape": f"K{K}-{args.strategy}",
+        "kind": "census", "mesh": dict(mesh.shape),
+        # census 'useful work': 2 membership-probe streams per candidate;
+        # model flops ~ total candidate-lane work on valid lanes
+        "active_params": 1, "global_batch": 1, "seq_len": 1,
+    }
+    r = roofline.analyze(compiled, meta)
+    # census-specific useful-work model: valid candidate lanes / padded lanes
+    deg = np.asarray(g.arrays.nbr_deg)
+    useful_lanes = float((deg[u] + deg[v]).sum())
+    padded_lanes = float(tasks.u.shape[0] * tasks.u.shape[1] * 2 * K)
+    rec = {
+        "dataset": args.dataset, "mesh": dict(mesh.shape), "tag": args.tag,
+        "strategy": args.strategy, "weights": args.weights, "K": K,
+        "n_dyads": int(len(u)), "max_deg": int(g.max_deg),
+        "imbalance": tasks.imbalance,
+        "lane_utilization": useful_lanes / padded_lanes,
+        "status": "ok",
+        "memory": {a: int(getattr(ma, a)) for a in
+                   ("argument_size_in_bytes", "temp_size_in_bytes",
+                    "peak_memory_in_bytes") if getattr(ma, a, None) is not None},
+        "roofline": {k: vv for k, vv in r.items()},
+        "total_s": time.time() - t0,
+    }
+    os.makedirs(args.out, exist_ok=True)
+    name = (f"census_{args.dataset}_{args.strategy}_K{K}"
+            f"{'_multipod' if args.multi_pod else ''}"
+            f"{('_' + args.tag) if args.tag else ''}")
+    with open(os.path.join(args.out, name + ".json"), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    print(json.dumps({k: rec[k] for k in
+                      ("imbalance", "lane_utilization")}, indent=1))
+    print({k: f"{vv:.3e}" if isinstance(vv, float) else vv
+           for k, vv in r.items() if k.endswith("_s") or k == "bottleneck"})
+    print(f"done in {rec['total_s']:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — required by the dry-run ordering constraints.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for(n_devices: int, model_parallel: int = 16):
+    """Elastic variant: whatever devices survive, TP degree preserved."""
+    data = max(1, n_devices // model_parallel)
+    return jax.make_mesh((data, model_parallel), ("data", "model"))

@@ -1,0 +1,120 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from sweep JSONs."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+ARCH_ORDER = [
+    "zamba2-1.2b", "h2o-danube-3-4b", "qwen1.5-4b", "qwen3-4b",
+    "deepseek-coder-33b", "pixtral-12b", "deepseek-v2-236b",
+    "granite-moe-3b-a800m", "rwkv6-3b", "musicgen-large",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(out_dir: str) -> dict:
+    recs = {}
+    for f in os.listdir(out_dir):
+        if f.endswith(".json"):
+            r = json.load(open(os.path.join(out_dir, f)))
+            recs[(r.get("arch"), r.get("shape"), r.get("mesh"),
+                  r.get("tag", ""))] = r
+    return recs
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def fmt_b(x):
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def dryrun_table(recs, mesh="pod16x16"):
+    lines = ["| arch | shape | status | compile | peak mem/dev | args/dev | "
+             "HLO flops/chip | coll bytes/chip |",
+             "|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, mesh, ""))
+            if r is None:
+                continue
+            if r["status"] != "ok":
+                reason = r.get("reason", r.get("error", ""))[:60]
+                lines.append(f"| {a} | {s} | {r['status']} ({reason}) | | | | | |")
+                continue
+            mem = r.get("memory", {})
+            rf = r["roofline"]
+            lines.append(
+                f"| {a} | {s} | ok | {r.get('compile_s', 0):.0f}s "
+                f"| {fmt_b(mem.get('peak_memory_in_bytes', 0))} "
+                f"| {fmt_b(mem.get('argument_size_in_bytes', 0))} "
+                f"| {rf['hlo_flops_per_chip']:.2e} "
+                f"| {fmt_b(rf['collective_bytes_per_chip'])} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh="pod16x16"):
+    lines = ["| arch | shape | compute | memory | collective | bottleneck | "
+             "MODEL/HLO flops | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, mesh, ""))
+            if r is None or r["status"] != "ok":
+                continue
+            rf = r["roofline"]
+            lines.append(
+                f"| {a} | {s} | {fmt_s(rf['compute_s'])} "
+                f"| {fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} "
+                f"| {rf['bottleneck'].replace('_s','')} "
+                f"| {rf['useful_flops_ratio']:.2f} "
+                f"| {100*rf['roofline_fraction']:.1f}% |")
+    return "\n".join(lines)
+
+
+def multipod_table(recs):
+    lines = ["| arch | shape | 16x16 | 2x16x16 |", "|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r1 = recs.get((a, s, "pod16x16", ""))
+            r2 = recs.get((a, s, "pod2x16x16", ""))
+            if r1 is None and r2 is None:
+                continue
+            st = lambda r: (r or {}).get("status", "-")
+            lines.append(f"| {a} | {s} | {st(r1)} | {st(r2)} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline", "multipod"])
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.section in ("all", "dryrun"):
+        print("### Dry-run (single-pod 16x16)\n")
+        print(dryrun_table(recs))
+        print()
+    if args.section in ("all", "multipod"):
+        print("### Multi-pod pass/fail\n")
+        print(multipod_table(recs))
+        print()
+    if args.section in ("all", "roofline"):
+        print("### Roofline (single-pod, per chip)\n")
+        print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,297 @@
+"""Roofline analysis from compiled HLO (the CPU-container profile source).
+
+Terms per (arch, mesh), TPU v5e constants:
+
+    compute    = HLO_FLOPs_per_chip / 197e12            [bf16 peak/chip]
+    memory     = HLO_bytes_per_chip / 819e9             [HBM bw/chip]
+    collective = collective_bytes_per_chip / 50e9       [per-link ICI bw]
+
+``compiled.cost_analysis()`` on an XLA:CPU artifact counts ``while`` bodies
+once (a 36-layer scan under-counts 36x), so we derive all three terms from
+our own walk of the *post-partitioning optimized* HLO
+(``compiled.as_text()``):
+
+  * **flops**: every ``dot`` contributes ``2 * numel(result) * K`` (K from
+    the lhs operand's contracting dims, looked up at its def site);
+  * **memory**: HBM traffic modeled at fusion boundaries — every
+    non-bookkeeping op at computation scope reads its operands and writes
+    its result (ops *inside* ``fused_computation``s stay in registers/VMEM
+    and are excluded, which is exactly the fusion contract);
+  * **collectives**: result bytes of all-gather / all-reduce(2x, ring) /
+    reduce-scatter / all-to-all / collective-permute;
+  * every term is multiplied through ``while`` trip counts, read exactly
+    from XLA's ``backend_config={"known_trip_count":{"n":...}}``.
+
+Raw ``cost_analysis`` numbers are recorded alongside for comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+# TPU v5e hardware constants (assignment-provided)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "token": 0, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,  # ring = reduce-scatter + all-gather
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+# ops whose standalone appearance does NOT move HBM bytes
+_BOOKKEEPING = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while",
+    "conditional", "call", "custom-call", "rng-bit-generator", "domain",
+    "opt-barrier",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+?)(?:\.\d+)?\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_RE = re.compile(
+    r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_numel_bytes(shape_str: str) -> tuple[int, int]:
+    numel_total, total = 0, 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        numel_total += n
+        total += n * _DTYPE_BYTES[dtype]
+    return numel_total, total
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    shape: str
+    opcode: str
+    rest: str  # operand list + attributes (raw tail of the line)
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    ops: list
+    shapes: dict  # op name -> shape str
+
+
+def parse_hlo(hlo: str):
+    comps: dict[str, _Comp] = {}
+    fusion_bodies: set[str] = set()
+    scalar_bodies: set[str] = set()
+    entry = None
+    cur: Optional[_Comp] = None
+    for line in hlo.splitlines():
+        if line.rstrip().endswith("{") and not line.startswith((" ", "\t")):
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr and " = " not in line.split("(")[0]:
+                cur = _Comp(hdr.group(2), [], {})
+                comps[cur.name] = cur
+                if hdr.group(1):
+                    entry = cur.name
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape, opcode, rest = m.groups()
+        cur.ops.append(_Op(name, shape, opcode, rest))
+        cur.shapes[name] = shape
+        # classify called computations so the walker skips fusion internals
+        if opcode == "fusion":
+            cm = re.search(r"calls=%?([\w.\-]+)", rest)
+            if cm:
+                fusion_bodies.add(cm.group(1))
+        if opcode in ("reduce", "sort", "map", "scatter", "reduce-window",
+                      "select-and-scatter", "all-reduce", "reduce-scatter"):
+            for c in _CALLED_RE.findall(rest):
+                scalar_bodies.add(c)
+    return comps, entry, fusion_bodies, scalar_bodies
+
+
+def _dot_flops(op: _Op, shapes: dict) -> float:
+    out_numel, _ = _shape_numel_bytes(op.shape)
+    lhs_m = _OPERAND_RE.search(op.rest)
+    k = 1
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    if lhs_m and cm and lhs_m.group(1) in shapes:
+        dims = _shape_dims(shapes[lhs_m.group(1)])
+        for ci in cm.group(1).split(","):
+            if ci and int(ci) < len(dims):
+                k *= dims[int(ci)]
+    return 2.0 * out_numel * k
+
+
+def analyze_hlo(hlo: str) -> dict:
+    comps, entry, fusion_bodies, scalar_bodies = parse_hlo(hlo)
+    skip = fusion_bodies | scalar_bodies
+    coll_breakdown: dict[str, float] = {}
+
+    def eval_comp(name: str, mult: float, acc: dict, seen: tuple):
+        comp = comps.get(name)
+        if comp is None or name in seen:
+            return
+        for op in comp.ops:
+            base = re.match(r"([a-z\-]+)", op.opcode)
+            base = base.group(1) if base else op.opcode
+            if base in _COLLECTIVES:
+                _, b = _shape_numel_bytes(op.shape)
+                b *= _COLLECTIVES[base]
+                acc["coll"] += b * mult
+                coll_breakdown[base] = coll_breakdown.get(base, 0) + b * mult
+            if base == "dot":
+                acc["flops"] += _dot_flops(op, comp.shapes) * mult
+            if base == "while":
+                tm = _TRIP_RE.search(op.rest)
+                trips = int(tm.group(1)) if tm else 1
+                called = _CALLED_RE.findall(op.rest)
+                for c in called:
+                    if "condition" in op.rest.split(c)[0][-30:]:
+                        eval_comp(c, mult * trips, acc, seen + (name,))
+                    else:
+                        eval_comp(c, mult * trips, acc, seen + (name,))
+                continue
+            if base == "conditional":
+                bm = _BRANCHES_RE.search(op.rest)
+                if bm:
+                    for c in _OPERAND_RE.findall(bm.group(1)):
+                        eval_comp(c, mult, acc, seen + (name,))
+                continue
+            if base in ("call", "fusion", "custom-call", "async-start"):
+                for c in _CALLED_RE.findall(op.rest):
+                    if c not in skip and base == "call":
+                        eval_comp(c, mult, acc, seen + (name,))
+            # in-place slice ops: only the slice region moves, not the buffer
+            if base == "dynamic-update-slice":
+                ops_found = _OPERAND_RE.findall(op.rest.split("),")[0])
+                if len(ops_found) >= 2 and ops_found[1] in comp.shapes:
+                    _, ub = _shape_numel_bytes(comp.shapes[ops_found[1]])
+                    acc["bytes"] += 2 * ub * mult
+                continue
+            if base == "dynamic-slice":
+                _, wb = _shape_numel_bytes(op.shape)
+                acc["bytes"] += 2 * wb * mult
+                continue
+            # HBM traffic model: fusion-boundary reads + writes
+            if base not in _BOOKKEEPING and base != "fusion":
+                _, wb = _shape_numel_bytes(op.shape)
+                rb = 0
+                operand_sec = op.rest.split("),")[0]
+                for o in _OPERAND_RE.findall(operand_sec):
+                    if o in comp.shapes:
+                        _, ob = _shape_numel_bytes(comp.shapes[o])
+                        rb += ob
+                acc["bytes"] += (wb + rb) * mult
+            elif base == "fusion":
+                _, wb = _shape_numel_bytes(op.shape)
+                rb = 0
+                operand_sec = op.rest.split("),")[0]
+                for o in _OPERAND_RE.findall(operand_sec):
+                    if o in comp.shapes:
+                        _, ob = _shape_numel_bytes(comp.shapes[o])
+                        rb += ob
+                acc["bytes"] += (wb + rb) * mult
+                # also walk fused computation for dots (rare: output fusions)
+                for c in _CALLED_RE.findall(op.rest):
+                    fcomp = comps.get(c)
+                    if fcomp:
+                        for fop in fcomp.ops:
+                            if fop.opcode.startswith("dot"):
+                                acc["flops"] += _dot_flops(fop, fcomp.shapes) * mult
+
+    acc = {"flops": 0.0, "bytes": 0.0, "coll": 0.0}
+    if entry:
+        eval_comp(entry, 1.0, acc, ())
+    acc["breakdown"] = coll_breakdown
+    return acc
+
+
+def roofline_terms(flops: float, bytes_hbm: float, coll_bytes: float) -> dict:
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_hbm / HBM_BW,
+        "collective_s": coll_bytes / ICI_BW,
+    }
+    bottleneck = max(("compute_s", "memory_s", "collective_s"),
+                     key=lambda k: terms[k])
+    terms["bottleneck"] = bottleneck
+    terms["step_s_lower_bound"] = terms[bottleneck]
+    return terms
+
+
+def model_flops(meta: dict) -> float:
+    """MODEL_FLOPS: 6·N·D train, 2·N·D forward/prefill, 2·N·B decode."""
+    n = meta["active_params"]
+    if meta["kind"] == "train":
+        return 6.0 * n * meta["global_batch"] * meta["seq_len"]
+    if meta["kind"] == "prefill":
+        return 2.0 * n * meta["global_batch"] * meta["seq_len"]
+    return 2.0 * n * meta["global_batch"]  # decode: one token per request
+
+
+def analyze(compiled, meta: dict) -> dict:
+    ca = {}
+    try:
+        ca = compiled.cost_analysis() or {}
+    except Exception:
+        pass
+    walked = analyze_hlo(compiled.as_text())
+    flops = walked["flops"]
+    bytes_hbm = walked["bytes"]
+    coll = walked["coll"]
+    n_chips = 1
+    for v in meta.get("mesh", {}).values():
+        n_chips *= v
+    mf = model_flops(meta)
+    out = {
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_hbm,
+        "collective_bytes_per_chip": coll,
+        "collective_breakdown": walked["breakdown"],
+        "cost_analysis_flops_raw": float(ca.get("flops", 0.0)),
+        "cost_analysis_bytes_raw": float(ca.get("bytes accessed", 0.0)),
+        "model_flops_total": mf,
+        "model_flops_per_chip": mf / n_chips,
+        "useful_flops_ratio": (mf / n_chips) / flops if flops else 0.0,
+        "n_chips": n_chips,
+    }
+    out.update(roofline_terms(flops, bytes_hbm, coll))
+    denom = out["step_s_lower_bound"]
+    out["roofline_fraction"] = (
+        (mf / n_chips / PEAK_FLOPS) / denom if denom > 0 else 0.0)
+    return out

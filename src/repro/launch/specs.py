@@ -1,0 +1,176 @@
+"""Dry-run cell construction: (arch x shape x mesh) -> lowerable step + specs.
+
+``build_cell`` assembles, for any assigned architecture and input shape:
+  * the step function (train_step / prefill_step / serve_step),
+  * abstract ``ShapeDtypeStruct`` arguments (no allocation — the pattern the
+    assignment mandates),
+  * per-argument ``NamedSharding``s derived from the logical rule table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..config import SHAPES, ModelConfig, RunConfig, ShapeConfig, get_config
+from ..models import transformer as tfm
+from ..models.params import abstract_params, param_specs
+from ..serve.decode import make_prefill_step, make_serve_step
+from ..sharding.partition import batch_axes, make_rules
+from ..train.optimizer import OptState
+from ..train.train_step import make_train_step
+
+
+class SkipCell(Exception):
+    """Raised when a (arch, shape) cell is inapplicable per DESIGN.md."""
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    cfg: ModelConfig
+    run: RunConfig
+    step_fn: Callable
+    args: tuple
+    in_shardings: tuple
+    meta: dict
+
+
+def _model_axis(mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _batch_shards(mesh) -> int:
+    return math.prod(mesh.shape[a] for a in batch_axes(mesh))
+
+
+def default_run(arch: str, shape: ShapeConfig) -> RunConfig:
+    """Baseline (pre-hillclimb) run settings per cell."""
+    big = arch in ("deepseek-coder-33b", "deepseek-v2-236b", "pixtral-12b")
+    micro = None
+    if shape.kind == "train":
+        micro = 8 if big else 4
+    return RunConfig(
+        attention_impl="chunked_causal",
+        attention_chunk=1024,
+        remat="full" if shape.kind == "train" else "none",
+        microbatch=micro,
+        act_shard_model=big and shape.kind == "train",
+    )
+
+
+def applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention arch: long_500k requires "
+                       "sub-quadratic attention (DESIGN.md shape-skip note)")
+    return True, ""
+
+
+def make_cell_rules(cfg: ModelConfig, shape: ShapeConfig, mesh, run: RunConfig):
+    ma = _model_axis(mesh)
+    bs = _batch_shards(mesh)
+    return make_rules(
+        mesh,
+        fsdp_axis=run.fsdp_axis,
+        expert_sharding=("expert" if cfg.moe and cfg.moe.n_experts % ma == 0
+                         else "tensor"),
+        batch_shardable=shape.global_batch % bs == 0,
+        seq_shard_kv=(shape.kind == "decode" and shape.global_batch % bs != 0
+                      and run.seq_shard_decode),
+        vocab_shardable=cfg.vocab_size % ma == 0,
+        act_shard_model=run.act_shard_model,
+    )
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _param_structs(cfg, rules, mesh, dtype):
+    defs = tfm.model_defs(cfg)
+    structs = abstract_params(defs, dtype)
+    shard = {k: _ns(mesh, s) for k, s in param_specs(defs, rules).items()}
+    return structs, shard
+
+
+def build_cell(arch: str, shape_name: str, mesh, run: Optional[RunConfig] = None,
+               *, smoke: bool = False) -> Cell:
+    cfg = get_config(arch, smoke=smoke)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        raise SkipCell(why)
+    run = run or default_run(arch, shape)
+    rules = make_cell_rules(cfg, shape, mesh, run)
+    bspec = rules.spec(("batch",))
+    B, T = shape.global_batch, shape.seq_len
+    meta = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+        "global_batch": B, "seq_len": T,
+        "mesh": dict(mesh.shape),
+        "microbatch": run.microbatch, "act_shard_model": run.act_shard_model,
+        "attention_impl": run.attention_impl,
+    }
+
+    if shape.kind == "train":
+        pdt = jnp.dtype(run.param_dtype)
+        structs, shard = _param_structs(cfg, rules, mesh, pdt)
+        opt = OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                       m=structs, v=structs)
+        opt_sh = OptState(step=_ns(mesh, P()), m=shard, v=shard)
+        n_text = T - cfg.n_prefix_embeds
+        batch = {"tokens": jax.ShapeDtypeStruct((B, n_text + 1), jnp.int32),
+                 "positions": jax.ShapeDtypeStruct((B, n_text), jnp.int32)}
+        batch_sh = {"tokens": _ns(mesh, P(*(bspec + (None,)))),
+                    "positions": _ns(mesh, P(*(bspec + (None,))))}
+        if cfg.n_prefix_embeds:
+            batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_prefix_embeds, cfg.d_model), jnp.bfloat16)
+            batch_sh["prefix_embeds"] = _ns(mesh, P(*(bspec + (None, None))))
+        step = make_train_step(cfg, run, mesh, rules,
+                               microbatch=run.microbatch)
+        return Cell(arch, shape, cfg, run, step,
+                    (structs, opt, batch), (shard, opt_sh, batch_sh), meta)
+
+    cdt = jnp.dtype(run.compute_dtype)
+    structs, shard = _param_structs(cfg, rules, mesh, cdt)
+
+    if shape.kind == "prefill":
+        n_text = T - cfg.n_prefix_embeds
+        args = [structs, jax.ShapeDtypeStruct((B, n_text), jnp.int32),
+                jax.ShapeDtypeStruct((B, n_text), jnp.int32)]
+        shs = [shard, _ns(mesh, P(*(bspec + (None,)))),
+               _ns(mesh, P(*(bspec + (None,))))]
+        if cfg.n_prefix_embeds:
+            args.append(jax.ShapeDtypeStruct(
+                (B, cfg.n_prefix_embeds, cfg.d_model), jnp.bfloat16))
+            shs.append(_ns(mesh, P(*(bspec + (None, None)))))
+        step = make_prefill_step(cfg, run, mesh, rules)
+        return Cell(arch, shape, cfg, run, step, tuple(args), tuple(shs), meta)
+
+    # decode
+    cache = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, B, T, dtype=cdt))
+    logical = tfm.cache_logical(
+        cfg,
+        batch_shardable=shape.global_batch % _batch_shards(mesh) == 0,
+        seq_shard=(shape.global_batch % _batch_shards(mesh) != 0
+                   and run.seq_shard_decode),
+    )
+    cache_sh = jax.tree.map(lambda lg: _ns(mesh, rules.spec(lg)), logical,
+                            is_leaf=lambda x: isinstance(x, tuple) and all(
+                                isinstance(i, (str, type(None))) for i in x))
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_sh = _ns(mesh, P(*(bspec + (None,))))
+    cpos = jax.ShapeDtypeStruct((), jnp.int32)
+    serve = make_serve_step(cfg, run, mesh, rules)
+    return Cell(arch, shape, cfg, run, serve,
+                (structs, cache, tokens, cpos),
+                (shard, cache_sh, tok_sh, _ns(mesh, P())), meta)

@@ -1,0 +1,74 @@
+"""Drive the full dry-run sweep: every (arch x shape x mesh) as a subprocess.
+
+Each cell runs in its own process because the 512-device XLA flag must be
+set before jax initializes (see dryrun.py).  Results land as JSON in
+``--out``; already-completed cells are skipped unless --force.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "zamba2-1.2b", "h2o-danube-3-4b", "qwen1.5-4b", "qwen3-4b",
+    "deepseek-coder-33b", "pixtral-12b", "deepseek-v2-236b",
+    "granite-moe-3b-a800m", "rwkv6-3b", "musicgen-large",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--archs", default=",".join(ARCHS))
+    ap.add_argument("--shapes", default=",".join(SHAPES))
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+
+    cells = [(a, s, m) for a in args.archs.split(",")
+             for s in args.shapes.split(",")
+             for m in args.meshes.split(",")]
+    t0 = time.time()
+    n_ok = n_fail = n_skip = 0
+    for i, (arch, shape, mesh) in enumerate(cells):
+        mesh_name = "pod2x16x16" if mesh == "multi" else "pod16x16"
+        path = os.path.join(args.out, f"{arch}__{shape}__{mesh_name}.json")
+        if os.path.exists(path) and not args.force:
+            st = json.load(open(path)).get("status")
+            if st in ("ok", "skip"):
+                print(f"[cached {st}] {arch} {shape} {mesh_name}", flush=True)
+                n_ok += st == "ok"
+                n_skip += st == "skip"
+                continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--out", args.out]
+        if mesh == "multi":
+            cmd.append("--multi-pod")
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout,
+                               env={**os.environ, "PYTHONPATH": "src"})
+            rec = json.load(open(path)) if os.path.exists(path) else {}
+            st = rec.get("status", "fail")
+        except subprocess.TimeoutExpired:
+            st = "timeout"
+            with open(path, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "timeout"}, f)
+        n_ok += st == "ok"
+        n_fail += st in ("fail", "timeout")
+        n_skip += st == "skip"
+        print(f"[{st:7s}] ({i+1}/{len(cells)}) {arch} {shape} {mesh_name} "
+              f"t={time.time()-t0:.0f}s", flush=True)
+    print(f"done: ok={n_ok} skip={n_skip} fail={n_fail} "
+          f"in {time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

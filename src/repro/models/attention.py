@@ -1,0 +1,367 @@
+"""Attention: GQA (dense / chunked flash-style XLA / sliding window) and MLA.
+
+Weight layout: projection outputs are stored *flattened* ``(d, H*hd)`` so
+the 16-way model axis always divides the sharded dim even when the head
+count (20/24/56) does not; per-head tensors exist only as jit-internal
+values where GSPMD's padded propagation is allowed.
+
+``chunked_causal`` is the production prefill path: a python-unrolled loop
+over query chunks where chunk ``i`` attends only kv chunks ``0..i`` (a
+*triangular* schedule — no FLOPs are spent on fully-masked blocks, unlike
+the rectangular masked variant kept as the paper-faithful/naive baseline),
+with an online-softmax scan over kv chunks inside (flash attention
+expressed in XLA; the Pallas kernel in repro.kernels is the TPU-native
+twin and is numerically checked against this).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..config.base import ModelConfig, RunConfig
+from .layers import apply_rope, rms_norm, rope_tables
+from .params import ParamDef
+
+NEG_INF = -1e30
+
+
+def _einsum_f32(subscripts, a, b):
+    """einsum with f32 accumulation: native mixed dot on TPU, explicit
+    casts on CPU (XLA:CPU's DotThunk cannot execute bf16xbf16->f32)."""
+    if jax.default_backend() == "tpu":
+        return jnp.einsum(subscripts, a, b,
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum(subscripts, a.astype(jnp.float32),
+                      b.astype(jnp.float32))
+
+
+class AttnCache(NamedTuple):
+    """Decode cache with flattened kv feature dim (B, S, Hkv*hd).
+
+    ``pos`` stores the absolute position held in each slot (sentinel 2**30
+    = empty), which makes sliding-window caches plain ring buffers: the
+    write index is ``position % S`` and masking falls out of the standard
+    position comparison.
+    """
+
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array  # (B, S) int32
+
+
+def attn_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    out_q, out_kv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    defs = {
+        "wq": ParamDef((d, out_q), ("embed", "heads_flat")),
+        "wk": ParamDef((d, out_kv), ("embed", "kv_flat")),
+        "wv": ParamDef((d, out_kv), ("embed", "kv_flat")),
+        "wo": ParamDef((out_q, d), ("heads_flat", "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((out_q,), ("heads_flat",), "zeros")
+        defs["bk"] = ParamDef((out_kv,), ("kv_flat",), "zeros")
+        defs["bv"] = ParamDef((out_kv,), ("kv_flat",), "zeros")
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), (None,), "ones")
+        defs["k_norm"] = ParamDef((hd,), (None,), "ones")
+    return defs
+
+
+def _grouped(q, k):
+    """reshape q to (B, T, Hkv, G, hd) matching k's (B, S, Hkv, hd)."""
+    B, T, H, hd = q.shape
+    Hkv = k.shape[2]
+    return q.reshape(B, T, Hkv, H // Hkv, hd)
+
+
+def _dense_attention(q, k, v, q_pos, kv_pos, window: Optional[int]):
+    """Reference rectangular attention (paper-faithful naive baseline)."""
+    qg = _grouped(q, k)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = kv_pos[:, None, :] <= q_pos[:, :, None]  # (B, T, S)
+    if window is not None:
+        mask &= kv_pos[:, None, :] > q_pos[:, :, None] - window
+    bias = jnp.where(mask, 0.0, NEG_INF).astype(jnp.float32)  # (B, T, S)
+    scores = scores + bias[:, None, None]
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", w.astype(v.dtype), v)
+    return out.reshape(q.shape)
+
+
+def _flash_rows(qg, k, v, q_pos, kv_pos, window, chunk):
+    """Online-softmax scan over kv chunks for one query block.
+
+    qg: (B, Tq, Hkv, G, hd);  k/v: (B, S, Hkv, hd) with S % chunk == 0.
+    """
+    B, Tq, Hkv, G, hd = qg.shape
+    S = k.shape[1]
+    n_kv = S // chunk
+    scale = 1.0 / math.sqrt(hd)
+    qf = (qg * scale).astype(qg.dtype)  # bf16 in, f32 MXU accumulation
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kc, vc, pc = xs  # (B, chunk, Hkv, hd), (B, chunk)
+        s = jnp.einsum("btkgd,bskd->bkgts", qf, kc,
+                       preferred_element_type=jnp.float32)
+        mask = pc[:, None, :] <= q_pos[:, :, None]
+        if window is not None:
+            mask &= pc[:, None, :] > q_pos[:, :, None] - window
+        bias = jnp.where(mask, 0.0, NEG_INF).astype(jnp.float32)  # (B,Tq,C)
+        s = s + bias[:, None, None]
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgts,bskd->bkgtd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    init = (
+        jnp.full((B, Hkv, G, Tq), NEG_INF, jnp.float32),
+        jnp.zeros((B, Hkv, G, Tq), jnp.float32),
+        jnp.zeros((B, Hkv, G, Tq, hd), jnp.float32),
+    )
+    xs = (
+        k.reshape(B, n_kv, chunk, Hkv, hd).swapaxes(0, 1),
+        v.reshape(B, n_kv, chunk, Hkv, hd).swapaxes(0, 1),
+        kv_pos.reshape(B, n_kv, chunk).swapaxes(0, 1),
+    )
+    (m, l, acc), _ = jax.lax.scan(step, init, xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4)  # (B, Tq, Hkv, G, hd)
+
+
+def _chunked_attention(q, k, v, q_pos, kv_pos, window, chunk, *, triangular,
+                       remat_rows=True):
+    """Flash-style attention; ``triangular=True`` skips above-diagonal blocks.
+
+    ``remat_rows`` recomputes each row's kv scan in the backward pass
+    instead of stashing per-iteration scores (flash-attention backward,
+    expressed in XLA) — trades ~one extra attention forward for an
+    O(T·chunk)-per-row score stash.
+    """
+    B, T, H, hd = q.shape
+    chunk = min(chunk, T)
+    if T % chunk:
+        chunk = math.gcd(T, chunk) or T
+    n_q = T // chunk
+    qg = _grouped(q, k)
+    rows = _flash_rows
+    if remat_rows:
+        rows = jax.checkpoint(_flash_rows, prevent_cse=False,
+                              static_argnums=(5, 6))
+    outs = []
+    for i in range(n_q):  # python-unrolled: static shapes per row
+        sl = slice(i * chunk, (i + 1) * chunk)
+        if triangular:
+            lo = 0
+            if window is not None:
+                lo = max(0, (i * chunk - window) // chunk)
+            kv_hi = (i + 1) * chunk
+            ks, vs, ps = (k[:, lo * chunk:kv_hi], v[:, lo * chunk:kv_hi],
+                          kv_pos[:, lo * chunk:kv_hi])
+        else:
+            ks, vs, ps = k, v, kv_pos
+        o = rows(qg[:, sl], ks, vs, q_pos[:, sl], ps, window, chunk)
+        outs.append(o)
+    out = jnp.concatenate(outs, axis=1)
+    return out.reshape(B, T, H, hd).astype(v.dtype)
+
+
+def _decode_attention(q, k, v, q_pos, kv_pos, window):
+    """Single-token decode: q (B, 1, H, hd) vs full cache (B, S, Hkv, hd)."""
+    qg = _grouped(q, k)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = kv_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        mask &= kv_pos[:, None, :] > q_pos[:, :, None] - window
+    s = s + jnp.where(mask, 0.0, NEG_INF).astype(jnp.float32)[:, None, None]
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", w, v)
+    return out.reshape(q.shape)
+
+
+def attention_core(q, k, v, q_pos, kv_pos, *, impl: str, chunk: int,
+                   window: Optional[int], remat_rows: bool = True):
+    if q.shape[1] == 1 and k.shape[1] > 1:
+        return _decode_attention(q, k, v, q_pos, kv_pos, window)
+    if impl == "dense":
+        return _dense_attention(q, k, v, q_pos, kv_pos, window)
+    if impl == "chunked":
+        return _chunked_attention(q, k, v, q_pos, kv_pos, window, chunk,
+                                  triangular=False, remat_rows=remat_rows)
+    if impl in ("chunked_causal", "pallas"):
+        # 'pallas' resolves to the Pallas kernel on TPU via kernels.ops;
+        # inside pure-XLA lowering contexts we use the triangular XLA twin.
+        if impl == "pallas":
+            try:
+                from ..kernels import ops as kops
+                return kops.flash_attention(q, k, v, q_pos, kv_pos,
+                                            window=window, chunk=chunk)
+            except Exception:
+                pass
+        return _chunked_attention(q, k, v, q_pos, kv_pos, window, chunk,
+                                  triangular=True, remat_rows=remat_rows)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def gqa_apply(cfg: ModelConfig, run: RunConfig, p: dict, prefix: str,
+              x: jax.Array, positions: jax.Array,
+              cache: Optional[AttnCache] = None, cache_pos=None):
+    """Full GQA block body (no residual/norm). Returns (out, new_cache)."""
+    B, T, d = x.shape
+    hd = cfg.resolved_head_dim
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    dtype = x.dtype
+
+    q = x @ p[prefix + "wq"].astype(dtype)
+    k = x @ p[prefix + "wk"].astype(dtype)
+    v = x @ p[prefix + "wv"].astype(dtype)
+    if cfg.qkv_bias:
+        q = q + p[prefix + "bq"].astype(dtype)
+        k = k + p[prefix + "bk"].astype(dtype)
+        v = v + p[prefix + "bv"].astype(dtype)
+    q = q.reshape(B, T, H, hd)
+    k = k.reshape(B, T, Hkv, hd)
+    v = v.reshape(B, T, Hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p[prefix + "q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p[prefix + "k_norm"], cfg.norm_eps)
+    cos, sin = rope_tables(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    if cache is not None:
+        S = cache.k.shape[1]
+        kf = k.reshape(B, T, Hkv * hd)
+        vf = v.reshape(B, T, Hkv * hd)
+        write = cache_pos % S  # ring buffer for sliding-window caches
+        ck = jax.lax.dynamic_update_slice(cache.k, kf.astype(cache.k.dtype),
+                                          (0, write, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, vf.astype(cache.v.dtype),
+                                          (0, write, 0))
+        newpos = positions.astype(jnp.int32)
+        cp = jax.lax.dynamic_update_slice(cache.pos, newpos, (0, write))
+        new_cache = AttnCache(k=ck, v=cv, pos=cp)
+        k = ck.reshape(B, S, Hkv, hd).astype(dtype)
+        v = cv.reshape(B, S, Hkv, hd).astype(dtype)
+        kv_pos = cp
+    else:
+        kv_pos = positions
+
+    out = attention_core(q, k, v, positions, kv_pos, impl=run.attention_impl,
+                         chunk=run.attention_chunk, window=cfg.sliding_window,
+                         remat_rows=getattr(run, "remat_attention", True))
+    out = out.reshape(B, T, H * hd)
+    return out @ p[prefix + "wo"].astype(dtype), new_cache
+
+
+# ----------------------------------------------------------------------------
+# MLA (deepseek-v2): compressed-KV attention with absorbed decode path.
+# ----------------------------------------------------------------------------
+
+class MLACache(NamedTuple):
+    ckv: jax.Array  # (B, S, kv_lora)
+    krope: jax.Array  # (B, S, rope_dim)
+    pos: jax.Array  # (B, S) int32; sentinel 2**30 = empty
+
+
+def mla_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk = m.nope_head_dim + m.rope_head_dim
+    return {
+        "wq_a": ParamDef((d, m.q_lora_rank), ("embed", "lora")),
+        "q_norm": ParamDef((m.q_lora_rank,), (None,), "ones"),
+        "wq_b": ParamDef((m.q_lora_rank, H * qk), ("lora", "heads_flat")),
+        "wkv_a": ParamDef((d, m.kv_lora_rank + m.rope_head_dim), ("embed", "lora")),
+        "kv_norm": ParamDef((m.kv_lora_rank,), (None,), "ones"),
+        "wk_b": ParamDef((m.kv_lora_rank, H * m.nope_head_dim), ("lora", "heads_flat")),
+        "wv_b": ParamDef((m.kv_lora_rank, H * m.v_head_dim), ("lora", "heads_flat")),
+        "wo": ParamDef((H * m.v_head_dim, d), ("heads_flat", "embed")),
+    }
+
+
+def mla_apply(cfg: ModelConfig, run: RunConfig, p: dict, prefix: str,
+              x: jax.Array, positions: jax.Array,
+              cache: Optional[MLACache] = None, cache_pos=None):
+    m = cfg.mla
+    B, T, d = x.shape
+    H = cfg.n_heads
+    dtype = x.dtype
+
+    q = rms_norm(x @ p[prefix + "wq_a"].astype(dtype), p[prefix + "q_norm"],
+                 cfg.norm_eps)
+    q = (q @ p[prefix + "wq_b"].astype(dtype)).reshape(
+        B, T, H, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    cos, sin = rope_tables(positions, m.rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    kv = x @ p[prefix + "wkv_a"].astype(dtype)
+    ckv, krope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    ckv = rms_norm(ckv, p[prefix + "kv_norm"], cfg.norm_eps)
+    krope = apply_rope(krope[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    new_cache = None
+    if cache is not None:
+        cc = jax.lax.dynamic_update_slice(cache.ckv, ckv.astype(cache.ckv.dtype),
+                                          (0, cache_pos, 0))
+        cr = jax.lax.dynamic_update_slice(cache.krope,
+                                          krope.astype(cache.krope.dtype),
+                                          (0, cache_pos, 0))
+        cp = jax.lax.dynamic_update_slice(cache.pos, positions.astype(jnp.int32),
+                                          (0, cache_pos))
+        new_cache = MLACache(ckv=cc, krope=cr, pos=cp)
+        ckv_full, krope_full = cc.astype(dtype), cr.astype(dtype)
+        kv_pos = cp
+    else:
+        ckv_full, krope_full = ckv, krope
+        kv_pos = positions
+
+    scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    wk_b = p[prefix + "wk_b"].astype(dtype).reshape(m.kv_lora_rank, H,
+                                                    m.nope_head_dim)
+    wv_b = p[prefix + "wv_b"].astype(dtype).reshape(m.kv_lora_rank, H,
+                                                    m.v_head_dim)
+    if T == 1 and ckv_full.shape[1] > 1:
+        # absorbed decode: never decompress the per-head K/V.
+        q_abs = jnp.einsum("bthn,lhn->bthl", q_nope, wk_b)
+        s = _einsum_f32("bthl,bsl->bhts", q_abs, ckv_full)
+        s += _einsum_f32("bthr,bsr->bhts", q_rope, krope_full)
+        s *= scale
+        mask = kv_pos[:, None, :] <= positions[:, :, None]
+        s = s + jnp.where(mask, 0.0, NEG_INF).astype(jnp.float32)[:, None]
+        w = jax.nn.softmax(s, axis=-1)
+        ctx = _einsum_f32("bhts,bsl->bthl", w.astype(dtype), ckv_full)
+        out = _einsum_f32("bthl,lhv->bthv", ctx.astype(dtype), wv_b)
+        out = out.astype(dtype)
+    else:
+        S = ckv_full.shape[1]
+        k_nope = jnp.einsum("bsl,lhn->bshn", ckv_full, wk_b)
+        v = jnp.einsum("bsl,lhv->bshv", ckv_full, wv_b)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope_full[:, :, None, :],
+                                      (B, S, H, m.rope_head_dim))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # pad v head dim up to qk head dim so the shared core can run; slice after.
+        pad = qq.shape[-1] - v.shape[-1]
+        v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        out = attention_core(qq, k, v_p, positions, kv_pos,
+                             impl=run.attention_impl, chunk=run.attention_chunk,
+                             window=None,
+                             remat_rows=getattr(run, "remat_attention", True)
+                             )[..., : m.v_head_dim]
+    out = out.reshape(B, T, H * m.v_head_dim)
+    return out @ p[prefix + "wo"].astype(dtype), new_cache

@@ -1,0 +1,47 @@
+"""Shared neural layers: norms, RoPE, SwiGLU MLP, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .params import ParamDef
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def rope_tables(positions: jax.Array, dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for given positions: (..., dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, T, H, D); cos/sin: (B, T, D//2) — llama rotate-half convention."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+def mlp_defs(d_model: int, d_ff: int) -> dict[str, ParamDef]:
+    return {
+        "w_gate": ParamDef((d_model, d_ff), ("embed", "ff")),
+        "w_up": ParamDef((d_model, d_ff), ("embed", "ff")),
+        "w_down": ParamDef((d_ff, d_model), ("ff", "embed")),
+    }
+
+
+def mlp_apply(p: dict, prefix: str, x: jax.Array, dtype) -> jax.Array:
+    g = x @ p[prefix + "w_gate"].astype(dtype)
+    u = x @ p[prefix + "w_up"].astype(dtype)
+    return (jax.nn.silu(g) * u) @ p[prefix + "w_down"].astype(dtype)

@@ -1,0 +1,159 @@
+"""Mixture-of-Experts with static-capacity balanced dispatch.
+
+This is where the paper's discipline transfers to the LM side (DESIGN.md
+§4): irregular work (tokens routed to experts ~ dyad tasks routed to
+workers) is packed into **static, balanced shards** (per-expert capacity
+slots ~ per-thread task queues), computed independently, and merged once at
+the end (combine-by-gather ~ the decoupled census merge).  Routing
+positions are computed with a sort over (token, expert) pairs — the same
+sorted-packing idea as ``core.balance.sorted_snake`` — instead of the
+O(tokens x experts) cumsum one-hot, which would not fit at 1M tokens.
+
+Sharding modes (see sharding.partition.make_rules):
+  * ``expert``: experts on the model axis (deepseek-v2: 160 % 16 == 0).
+  * ``tensor``: experts replicated, each expert's ffn tensor-parallel
+    (granite-moe: 40 experts do not divide the 16-way axis).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..config.base import ModelConfig
+from .layers import mlp_defs, mlp_apply
+from .params import ParamDef, prefixed
+
+
+def moe_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
+    mo = cfg.moe
+    d = cfg.d_model
+    defs = {
+        "router": ParamDef((d, mo.n_experts), ("embed", None)),
+        "w_gate": ParamDef((mo.n_experts, d, mo.d_ff_expert),
+                           ("experts", "expert_embed", "expert_ff")),
+        "w_up": ParamDef((mo.n_experts, d, mo.d_ff_expert),
+                         ("experts", "expert_embed", "expert_ff")),
+        "w_down": ParamDef((mo.n_experts, mo.d_ff_expert, d),
+                           ("experts", "expert_ff", "expert_embed")),
+    }
+    if mo.n_shared_experts:
+        defs.update(prefixed(mlp_defs(d, mo.d_ff_shared * mo.n_shared_experts),
+                             "shared/"))
+    return defs
+
+
+def _positions_in_expert(expert_ids: jax.Array, n_experts: int) -> jax.Array:
+    """Slot index of each (token,slot) within its expert's capacity queue.
+
+    Sort-based (Megablocks-style): O(N log N), no (N, E) materialization.
+    """
+    n = expert_ids.shape[0]
+    order = jnp.argsort(expert_ids, stable=True)
+    sorted_e = expert_ids[order]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    seg_start = jnp.concatenate([jnp.ones(1, bool), sorted_e[1:] != sorted_e[:-1]])
+    start_idx = jnp.where(seg_start, idx, 0)
+    seg_base = jax.lax.associative_scan(jnp.maximum, start_idx)
+    pos_sorted = idx - seg_base
+    pos = jnp.zeros(n, jnp.int32).at[order].set(pos_sorted)
+    return pos
+
+
+def moe_apply(cfg: ModelConfig, p: dict, prefix: str, x: jax.Array,
+              groups: int | None = None, dense_eval: bool = False):
+    """x: (B, T, d) -> (y, aux_loss).
+
+    ``groups=None`` is the flat baseline: one global capacity buffer, whose
+    token scatter GSPMD realizes as a *replicated buffer + all-reduce* —
+    the dominant collective in the MoE train cells (EXPERIMENTS.md §Perf).
+    ``groups=G`` (GShard-style grouped dispatch, G aligned with the batch
+    shards) keeps every scatter and every position-sort local to its data
+    shard; cross-device traffic collapses to the standard TP all-reduce of
+    the combined output.
+    """
+    mo = cfg.moe
+    B, T, d = x.shape
+    dtype = x.dtype
+    n_tok = B * T
+    G = groups or 1
+    assert n_tok % G == 0, (n_tok, G)
+    ng = n_tok // G
+    xg = x.reshape(G, ng, d)
+
+    logits = (xg @ p[prefix + "router"].astype(dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, ng, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, mo.top_k)  # (G, ng, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    if dense_eval:
+        # tiny-expert fast path: evaluate ALL experts for all tokens and
+        # combine with the (zero-masked) gate matrix.  top_k/E more FLOPs,
+        # but no capacity buffers, no sorts, no dispatch collectives —
+        # and no token drops.  Wins whenever the cell is dispatch-bound
+        # and compute has headroom (granite: 40 experts x d_ff 512).
+        gates = jnp.zeros((G, ng, mo.n_experts), dtype)
+        for s in range(mo.top_k):
+            gates = gates.at[
+                jnp.arange(G)[:, None], jnp.arange(ng)[None, :],
+                expert_ids[..., s]].add(gate_vals[..., s].astype(dtype))
+        h_g = jnp.einsum("gnd,edf->gnef", xg, p[prefix + "w_gate"].astype(dtype))
+        h_u = jnp.einsum("gnd,edf->gnef", xg, p[prefix + "w_up"].astype(dtype))
+        y = jnp.einsum("gnef,efd,gne->gnd", jax.nn.silu(h_g) * h_u,
+                       p[prefix + "w_down"].astype(dtype), gates)
+        if mo.n_shared_experts:
+            y = y + mlp_apply(p, prefix + "shared/", xg, dtype)
+        me = probs.reshape(n_tok, mo.n_experts).mean(0)
+        ce = jnp.zeros(mo.n_experts, jnp.float32)
+        ce = ce.at[expert_ids.reshape(-1)].add(1.0 / (n_tok * mo.top_k))
+        aux = mo.n_experts * jnp.sum(me * ce) * mo.router_aux_weight
+        return y.reshape(B, T, d), aux
+
+    capacity = max(1, int(math.ceil(ng * mo.top_k / mo.n_experts
+                                    * mo.capacity_factor)))
+    flat_ids = expert_ids.reshape(G, ng * mo.top_k)  # token-major per group
+    pos = jax.vmap(_positions_in_expert, in_axes=(0, None))(
+        flat_ids, mo.n_experts).reshape(G, ng, mo.top_k)
+    keep = pos < capacity
+
+    # dispatch: one (vmapped-over-groups) scatter per top-k slot
+    buf = jnp.zeros((G, mo.n_experts, capacity, d), dtype)
+
+    def scatter_group(b, e_s, p_s, src):
+        return b.at[e_s, p_s].add(src, mode="drop")
+
+    for s in range(mo.top_k):
+        e_s, p_s, k_s = expert_ids[..., s], pos[..., s], keep[..., s]
+        src = jnp.where(k_s[..., None], xg, 0)
+        p_c = jnp.where(k_s, p_s, capacity)  # dropped -> OOB (ignored)
+        buf = jax.vmap(scatter_group)(buf, e_s, p_c, src)
+
+    # expert ffn: (G, E, C, d) x (E, d, f) batched matmuls -> MXU
+    g = jnp.einsum("gecd,edf->gecf", buf, p[prefix + "w_gate"].astype(dtype))
+    u = jnp.einsum("gecd,edf->gecf", buf, p[prefix + "w_up"].astype(dtype))
+    out_buf = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g) * u,
+                         p[prefix + "w_down"].astype(dtype))
+
+    # combine: decoupled-accumulator merge (gather + weighted sum)
+    y = jnp.zeros((G, ng, d), dtype)
+
+    def gather_group(ob, e_s, p_s):
+        return ob[e_s, p_s]
+
+    for s in range(mo.top_k):
+        e_s, p_s, k_s = expert_ids[..., s], pos[..., s], keep[..., s]
+        contrib = jax.vmap(gather_group)(
+            out_buf, e_s, jnp.minimum(p_s, capacity - 1))
+        w = jnp.where(k_s, gate_vals[..., s], 0).astype(dtype)
+        y = y + contrib * w[..., None]
+
+    if mo.n_shared_experts:
+        y = y + mlp_apply(p, prefix + "shared/", xg, dtype)
+
+    # load-balancing aux loss (Switch-style, global means)
+    me = probs.reshape(n_tok, mo.n_experts).mean(0)
+    ce = jnp.zeros(mo.n_experts, jnp.float32)
+    ce = ce.at[flat_ids.reshape(-1)].add(1.0 / (n_tok * mo.top_k))
+    aux = mo.n_experts * jnp.sum(me * ce) * mo.router_aux_weight
+    return y.reshape(B, T, d), aux

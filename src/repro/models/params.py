@@ -1,0 +1,74 @@
+"""Declarative parameter framework: one table drives init AND sharding specs.
+
+``ParamDef`` describes shape + logical axes + initializer for every weight;
+``init_params`` materializes arrays (jit-friendly), ``param_specs`` maps the
+same table through the sharding rules — so the two can never drift.
+
+Params live in a flat dict ``{"path/like/this": array}``.  Per-layer stacks
+(for ``lax.scan`` over layers) get a leading ``L`` dim via :func:`stacked`.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding.partition import Rules
+
+
+class ParamDef(NamedTuple):
+    shape: tuple
+    logical: tuple  # logical axis name per dim (see sharding.partition)
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float | None = None  # stddev override
+
+
+def stacked(defs: dict[str, ParamDef], n: int, prefix: str = "") -> dict[str, ParamDef]:
+    """Prepend a layer-stack dim to every def (for scan-over-layers)."""
+    out = {}
+    for k, d in defs.items():
+        out[prefix + k] = ParamDef((n, *d.shape), ("layers", *d.logical), d.init, d.scale)
+    return out
+
+
+def prefixed(defs: dict[str, ParamDef], prefix: str) -> dict[str, ParamDef]:
+    return {prefix + k: v for k, v in defs.items()}
+
+
+def init_params(defs: dict[str, ParamDef], key: jax.Array, dtype=jnp.float32):
+    """Materialize all params (deterministic per-path keys; jittable)."""
+    params = {}
+    for path in sorted(defs):
+        d = defs[path]
+        k = jax.random.fold_in(key, _path_hash(path))
+        if d.init == "zeros":
+            params[path] = jnp.zeros(d.shape, dtype)
+        elif d.init == "ones":
+            params[path] = jnp.ones(d.shape, dtype)
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            std = d.scale if d.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+            params[path] = (jax.random.normal(k, d.shape, dtype) * std).astype(dtype)
+    return params
+
+
+def param_specs(defs: dict[str, ParamDef], rules: Rules):
+    return {path: rules.spec(d.logical) for path, d in defs.items()}
+
+
+def abstract_params(defs: dict[str, ParamDef], dtype=jnp.float32):
+    return {p: jax.ShapeDtypeStruct(d.shape, dtype) for p, d in defs.items()}
+
+
+def _path_hash(path: str) -> int:
+    h = 2166136261
+    for ch in path.encode():
+        h = ((h ^ ch) * 16777619) & 0x7FFFFFFF
+    return h
+
+
+def count_params(defs: dict[str, ParamDef]) -> int:
+    return int(sum(np.prod(d.shape) for d in defs.values()))

@@ -1,0 +1,178 @@
+"""RWKV6 ("Finch") block: time-mix with data-dependent per-channel decay.
+
+Recurrence per head (state S in R^{Dk x Dv}):
+
+    o_t = r_t^T (S_{t-1} + (u ⊙ k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,     w_t = exp(-exp(w0 + lora(x_t)))
+
+Training uses a chunked linear-attention formulation: within a chunk of
+length L the pairwise decay factors are factorized as
+``(r_t ⊙ e^{E_t}) · (k_s ⊙ e^{-Λ_s})`` with cumulative log decays clamped to
+±CLAMP for fp32 stability (contributions below e^-30 are numerically zero);
+across chunks a ``lax.scan`` carries the state.  Decode uses the exact
+one-step recurrence.  ``tests/test_rwkv.py`` checks chunked vs recurrent.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..config.base import ModelConfig
+from .layers import rms_norm
+from .params import ParamDef
+
+CLAMP = 30.0
+
+
+def rwkv_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
+    r = cfg.rwkv
+    d = cfg.d_model
+    return {
+        # time-mix
+        "mu_r": ParamDef((d,), (None,), "zeros"),
+        "mu_k": ParamDef((d,), (None,), "zeros"),
+        "mu_v": ParamDef((d,), (None,), "zeros"),
+        "mu_w": ParamDef((d,), (None,), "zeros"),
+        "mu_g": ParamDef((d,), (None,), "zeros"),
+        "wr": ParamDef((d, d), ("embed", "heads_flat")),
+        "wk": ParamDef((d, d), ("embed", "heads_flat")),
+        "wv": ParamDef((d, d), ("embed", "heads_flat")),
+        "wg": ParamDef((d, d), ("embed", "heads_flat")),
+        "wo": ParamDef((d, d), ("heads_flat", "embed")),
+        "w0": ParamDef((d,), (None,), "zeros"),
+        "wA": ParamDef((d, r.decay_lora), ("embed", "lora")),
+        "wB": ParamDef((r.decay_lora, d), ("lora", None)),
+        "u": ParamDef((d,), (None,), "zeros"),
+        "ln_x": ParamDef((d,), (None,), "ones"),
+        # channel-mix
+        "mu_k_cm": ParamDef((d,), (None,), "zeros"),
+        "mu_r_cm": ParamDef((d,), (None,), "zeros"),
+        "wk_cm": ParamDef((d, cfg.d_ff), ("embed", "ff")),
+        "wv_cm": ParamDef((cfg.d_ff, d), ("ff", "embed")),
+        "wr_cm": ParamDef((d, d), ("embed", "heads_flat")),
+    }
+
+
+def _shift(x, prev=None):
+    """token shift: x_{t-1} with x_{-1} = prev (or 0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None].astype(x.dtype)
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def wkv_chunked(r, k, v, w_log, u, chunk, state0=None):
+    """r,k,v,w_log: (B,T,H,D); u: (H,D). Returns (o, final_state (B,H,D,D))."""
+    B, T, H, D = r.shape
+    L = min(chunk, T)
+    nc = T // L
+    rs = r.astype(jnp.float32).reshape(B, nc, L, H, D)
+    ks = k.astype(jnp.float32).reshape(B, nc, L, H, D)
+    vs = v.astype(jnp.float32).reshape(B, nc, L, H, D)
+    ws = w_log.astype(jnp.float32).reshape(B, nc, L, H, D)
+    if state0 is None:
+        state0 = jnp.zeros((B, H, D, D), jnp.float32)
+
+    tri = jnp.tril(jnp.ones((L, L), bool), -1)  # strict lower: s < t
+
+    def step(S, xs):
+        rc, kc, vc, wc = xs  # (B,L,H,D)
+        lam = jnp.cumsum(wc, axis=1)  # inclusive cumulative log decay Λ_t
+        lam_ex = lam - wc  # exclusive: E_t = Λ_{t-1}
+        # intra-chunk decays as PAIRWISE differences (always <= 0 for s < t,
+        # so exp never overflows; factorized e^{E_t}·e^{-Λ_s} would corrupt
+        # under saturating decay once both factors clamp).
+        diff = lam_ex[:, :, None] - lam[:, None, :]  # (B, L(t), L(s), H, D)
+        dmat = jnp.exp(jnp.minimum(diff, 0.0)) * tri[None, :, :, None, None]
+        A = jnp.einsum("blhd,bshd,blshd->bhls", rc, kc, dmat)
+        o_intra = jnp.einsum("bhls,bshd->blhd", A, vc)
+        bonus = jnp.einsum("blhd,blhd->blh", rc, u[None, None] * kc)
+        o_intra = o_intra + bonus[..., None] * vc
+        o_inter = jnp.einsum("blhd,bhdv->blhv", rc * jnp.exp(lam_ex), S)
+        # state update: S' = diag(e^{Λ_L}) S + Σ_s (k_s e^{Λ_L - Λ_s}) v_s^T
+        tail = jnp.exp(lam[:, -1:] - lam)  # (B,L,H,D), exponent <= 0
+        decay_all = jnp.exp(lam[:, -1])  # (B,H,D), exponent <= 0
+        S_new = (decay_all[..., None] * S
+                 + jnp.einsum("bshd,bshv->bhdv", kc * tail, vc))
+        return S_new, o_intra + o_inter
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rs, ks, vs, ws))
+    S_fin, os_ = jax.lax.scan(step, state0, xs)
+    o = jnp.moveaxis(os_, 0, 1).reshape(B, T, H, D)
+    return o, S_fin
+
+
+def wkv_recurrent(r, k, v, w_log, u, state0=None):
+    """Exact per-step recurrence (oracle + decode path)."""
+    B, T, H, D = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((B, H, D, D), jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = (t.astype(jnp.float32) for t in xs)  # (B,H,D)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,Dk,Dv)
+        o = jnp.einsum("bhd,bhdv->bhv", rt, S + u[None, :, :, None] * kv)
+        S_new = jnp.exp(wt)[..., None] * S + kv
+        return S_new, o
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w_log))
+    S_fin, os_ = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(os_, 0, 1), S_fin
+
+
+def time_mix_apply(cfg: ModelConfig, p: dict, prefix: str, x: jax.Array,
+                   cache: dict | None = None):
+    r_cfg = cfg.rwkv
+    B, T, d = x.shape
+    H, D = d // r_cfg.head_dim, r_cfg.head_dim
+    dtype = x.dtype
+
+    prev = cache.get("x_tm") if cache else None
+    xs = _shift(x, prev)
+
+    def mix(mu):
+        m = p[prefix + mu].astype(dtype)
+        return x + m * (xs - x)
+
+    r = (mix("mu_r") @ p[prefix + "wr"].astype(dtype)).reshape(B, T, H, D)
+    k = (mix("mu_k") @ p[prefix + "wk"].astype(dtype)).reshape(B, T, H, D)
+    v = (mix("mu_v") @ p[prefix + "wv"].astype(dtype)).reshape(B, T, H, D)
+    g = jax.nn.silu(mix("mu_g") @ p[prefix + "wg"].astype(dtype))
+    xw = mix("mu_w")
+    w_raw = (p[prefix + "w0"].astype(jnp.float32)
+             + (jnp.tanh(xw @ p[prefix + "wA"].astype(dtype)).astype(jnp.float32)
+                @ p[prefix + "wB"].astype(jnp.float32)))
+    w_log = -jnp.exp(jnp.clip(w_raw, -20.0, 10.0)).reshape(B, T, H, D)
+    u = p[prefix + "u"].astype(jnp.float32).reshape(H, D)
+
+    state0 = cache.get("state") if cache else None
+    if T == 1 and cache is not None:
+        o, S = wkv_recurrent(r, k, v, w_log, u, state0)
+    else:
+        o, S = wkv_chunked(r, k, v, w_log, u, r_cfg.chunk, state0)
+
+    o = o.reshape(B, T, d).astype(dtype)
+    o = rms_norm(o, p[prefix + "ln_x"], cfg.norm_eps) * g
+    out = o @ p[prefix + "wo"].astype(dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"x_tm": x[:, -1], "state": S}
+    return out, new_cache
+
+
+def channel_mix_apply(cfg: ModelConfig, p: dict, prefix: str, x: jax.Array,
+                      cache: dict | None = None):
+    dtype = x.dtype
+    prev = cache.get("x_cm") if cache else None
+    xs = _shift(x, prev)
+    mk = p[prefix + "mu_k_cm"].astype(dtype)
+    mr = p[prefix + "mu_r_cm"].astype(dtype)
+    xk = x + mk * (xs - x)
+    xr = x + mr * (xs - x)
+    k = jnp.square(jax.nn.relu(xk @ p[prefix + "wk_cm"].astype(dtype)))
+    v = k @ p[prefix + "wv_cm"].astype(dtype)
+    r = jax.nn.sigmoid(xr @ p[prefix + "wr_cm"].astype(dtype))
+    out = r * v
+    new_cache = {"x_cm": x[:, -1]} if cache is not None else None
+    return out, new_cache

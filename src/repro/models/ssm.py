@@ -1,0 +1,155 @@
+"""Mamba2 (SSD) block — chunked, MXU-friendly formulation.
+
+The selective-state-space recurrence
+
+    h_t = exp(dt_t * a) * h_{t-1} + dt_t * B_t x_t,     y_t = C_t . h_t + D x_t
+
+is evaluated with the SSD chunk decomposition (Dao & Gu 2024): the sequence
+is split into chunks of length L; within a chunk the contribution is a
+masked (L, L) matmul (quadratic-but-tiny, lands on the MXU), across chunks a
+``lax.scan`` carries the (H, P, N) state.  This is the TPU-native analogue
+of the paper's "turn irregular recurrence into dense blocked compute".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..config.base import ModelConfig
+from .layers import rms_norm
+from .params import ParamDef
+
+
+def ssm_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    gn = s.n_groups * s.d_state
+    H = di // s.head_dim
+    return {
+        "wx": ParamDef((d, di), ("embed", "ff")),
+        "wz": ParamDef((d, di), ("embed", "ff")),
+        "wB": ParamDef((d, gn), ("embed", None)),
+        "wC": ParamDef((d, gn), ("embed", None)),
+        "wdt": ParamDef((d, H), ("embed", None)),
+        "conv_x": ParamDef((s.conv_width, di), (None, "ff"), "normal", 0.5),
+        "conv_B": ParamDef((s.conv_width, gn), (None, None), "normal", 0.5),
+        "conv_C": ParamDef((s.conv_width, gn), (None, None), "normal", 0.5),
+        "A_log": ParamDef((H,), (None,), "zeros"),
+        "D": ParamDef((H,), (None,), "ones"),
+        "dt_bias": ParamDef((H,), (None,), "zeros"),
+        "norm": ParamDef((di,), (None,), "ones"),
+        "wo": ParamDef((di, d), ("ff", "embed")),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: (B, T, C), w: (W, C); state: (B, W-1, C)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def _segsum_exp(l):
+    """exp(cumsum segment sums): (..., L) -> (..., L, L) lower-tri decay."""
+    L = l.shape[-1]
+    cs = jnp.cumsum(l, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (.., t, s) = sum_{s+1..t}
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x, dt, a, B_mat, C_mat, chunk, state0=None):
+    """SSD scan.  x: (B,T,H,P), dt: (B,T,H), a: (H,), B/C: (B,T,N).
+
+    Returns (y, final_state) with state (B,H,P,N). float32 internally.
+    """
+    Bsz, T, H, P = x.shape
+    N = B_mat.shape[-1]
+    L = min(chunk, T)
+    nc = T // L
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, L, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nc, L, H)
+    Bf = B_mat.astype(jnp.float32).reshape(Bsz, nc, L, N)
+    Cf = C_mat.astype(jnp.float32).reshape(Bsz, nc, L, N)
+    l = dtf * a  # (B,nc,L,H) negative decay logs
+    if state0 is None:
+        state0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def step(S, xs):
+        xc, dtc, Bc, Cc, lc = xs  # (B,L,H,P), (B,L,H), (B,L,N), (B,L,N), (B,L,H)
+        cs = jnp.cumsum(lc, axis=1)  # (B,L,H)
+        # inter-chunk: y_t += C_t . (exp(cs_t) * S_prev)
+        y_inter = jnp.einsum("bln,blh,bhpn->blhp", Cc, jnp.exp(cs), S)
+        # intra-chunk: masked (L,L) decay matmul
+        Dm = _segsum_exp(jnp.moveaxis(lc, -1, 1))  # (B,H,L,L)
+        CB = jnp.einsum("bln,bsn->bls", Cc, Bc)
+        y_intra = jnp.einsum("bls,bhls,bsh,bshp->blhp", CB, Dm, dtc, xc)
+        # state update
+        decay_tail = jnp.exp(cs[:, -1:] - cs)  # (B,L,H): prod_{s+1..L}
+        S_chunk = jnp.einsum("bsn,bsh,bshp->bhpn", Bc, decay_tail * dtc, xc)
+        S_new = jnp.exp(cs[:, -1])[..., None, None] * S + S_chunk
+        return S_new, y_inter + y_intra
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xf, dtf, Bf, Cf, l))
+    S_fin, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, T, H, P)
+    return y, S_fin
+
+
+def ssm_apply(cfg: ModelConfig, p: dict, prefix: str, x: jax.Array,
+              cache: dict | None = None):
+    """Mamba2 block body. cache: {'conv_x','conv_B','conv_C','state'} or None."""
+    s = cfg.ssm
+    B, T, d = x.shape
+    di = s.expand * d
+    H = di // s.head_dim
+    N = s.n_groups * s.d_state
+    dtype = x.dtype
+
+    z = x @ p[prefix + "wz"].astype(dtype)
+    xi = x @ p[prefix + "wx"].astype(dtype)
+    Bm = x @ p[prefix + "wB"].astype(dtype)
+    Cm = x @ p[prefix + "wC"].astype(dtype)
+    dt = jax.nn.softplus((x @ p[prefix + "wdt"].astype(dtype)).astype(jnp.float32)
+                         + p[prefix + "dt_bias"].astype(jnp.float32))
+
+    cx = cache.get("conv_x") if cache else None
+    cB = cache.get("conv_B") if cache else None
+    cC = cache.get("conv_C") if cache else None
+    xi, ncx = _causal_conv(xi, p[prefix + "conv_x"].astype(dtype), cx)
+    Bm, ncB = _causal_conv(Bm, p[prefix + "conv_B"].astype(dtype), cB)
+    Cm, ncC = _causal_conv(Cm, p[prefix + "conv_C"].astype(dtype), cC)
+
+    a = -jnp.exp(p[prefix + "A_log"].astype(jnp.float32))  # (H,)
+    xh = xi.reshape(B, T, H, s.head_dim)
+    state0 = cache.get("state") if cache else None
+
+    if T == 1 and cache is not None:
+        # exact single-step decode
+        da = jnp.exp(dt[:, 0] * a)  # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0],
+                         Bm[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        S = state0 * da[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), S)
+        y = y[:, None]  # (B,1,H,P)
+        new_state = S
+    else:
+        y, new_state = ssd_chunked(xh, dt, a, Bm, Cm, s.chunk, state0)
+
+    y = y + p[prefix + "D"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, T, di).astype(dtype)
+    y = rms_norm(y * jax.nn.silu(z), p[prefix + "norm"], cfg.norm_eps)
+    out = y @ p[prefix + "wo"].astype(dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv_x": ncx, "conv_B": ncB, "conv_C": ncC,
+                     "state": new_state}
+    return out, new_cache

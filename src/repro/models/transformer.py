@@ -1,0 +1,381 @@
+"""Composable decoder stack: builds any assigned architecture from its config.
+
+Families
+  * dense / moe / vlm / audio : pre-norm blocks of (GQA|MLA) attention + (MLP|MoE)
+  * rwkv                      : time-mix + channel-mix blocks
+  * hybrid (zamba2)           : Mamba2 backbone with one *weight-shared*
+                                attention block invoked every 6th layer —
+                                structured as a scan over 6 super-blocks of
+                                [6 mamba + shared-attn], plus 2 tail layers.
+
+Layers are ``lax.scan``-ned over stacked parameters so HLO size (and dry-run
+compile time) is depth-independent; heterogeneous pieces (deepseek-v2's
+leading dense layer, zamba2's shared block) live outside the stack.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..config.base import ModelConfig, RunConfig
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import rwkv as rwkv_mod
+from . import ssm as ssm_mod
+from .attention import AttnCache, MLACache, attn_defs, gqa_apply, mla_apply, mla_defs
+from .layers import mlp_apply, mlp_defs, rms_norm
+from .params import ParamDef, init_params, param_specs, prefixed, stacked
+
+
+# ----------------------------------------------------------------------------
+# parameter tables
+# ----------------------------------------------------------------------------
+
+def _block_defs(cfg: ModelConfig, *, use_moe: bool) -> dict[str, ParamDef]:
+    defs = {"ln1": ParamDef((cfg.d_model,), (None,), "ones"),
+            "ln2": ParamDef((cfg.d_model,), (None,), "ones")}
+    a_defs = mla_defs(cfg) if cfg.mla is not None else attn_defs(cfg)
+    defs.update(prefixed(a_defs, "attn/"))
+    if use_moe:
+        defs.update(prefixed(moe_mod.moe_defs(cfg), "moe/"))
+    else:
+        defs.update(prefixed(mlp_defs(cfg.d_model, cfg.d_ff), "mlp/"))
+    return defs
+
+
+def _rwkv_block_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
+    defs = {"ln1": ParamDef((cfg.d_model,), (None,), "ones"),
+            "ln2": ParamDef((cfg.d_model,), (None,), "ones")}
+    defs.update(prefixed(rwkv_mod.rwkv_defs(cfg), "mix/"))
+    return defs
+
+
+def _mamba_block_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
+    defs = {"ln": ParamDef((cfg.d_model,), (None,), "ones")}
+    defs.update(prefixed(ssm_mod.ssm_defs(cfg), "ssm/"))
+    return defs
+
+
+def zamba_plan(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(n_super, per_super, n_tail) for the hybrid stack."""
+    per = cfg.ssm.attn_every
+    n_super = cfg.n_layers // per
+    n_tail = cfg.n_layers - n_super * per
+    return n_super, per, n_tail
+
+
+def model_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
+    d = cfg.d_model
+    defs = {
+        "embed": ParamDef((cfg.vocab_size, d), ("vocab", "embed"), "normal", 0.02),
+        "final_ln": ParamDef((d,), (None,), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((d, cfg.vocab_size), ("embed", "vocab"))
+    if cfg.rwkv is not None:
+        defs.update(stacked(_rwkv_block_defs(cfg), cfg.n_layers, "layers/"))
+    elif cfg.ssm is not None:
+        n_super, per, n_tail = zamba_plan(cfg)
+        defs.update(stacked(_mamba_block_defs(cfg), n_super * per, "layers/"))
+        for t in range(n_tail):
+            defs.update(prefixed(_mamba_block_defs(cfg), f"tail{t}/"))
+        defs.update(prefixed(_block_defs(cfg, use_moe=False), "shared/"))
+    else:
+        use_moe = cfg.moe is not None
+        first_dense = cfg.moe.first_dense_layers if use_moe else 0
+        n_stacked = cfg.n_layers - first_dense
+        defs.update(stacked(_block_defs(cfg, use_moe=use_moe), n_stacked, "layers/"))
+        for i in range(first_dense):
+            defs.update(prefixed(_block_defs(cfg, use_moe=False), f"dense{i}/"))
+    return defs
+
+
+def init_model(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32):
+    return init_params(model_defs(cfg), key, dtype)
+
+
+def model_specs(cfg: ModelConfig, rules):
+    return param_specs(model_defs(cfg), rules)
+
+
+# ----------------------------------------------------------------------------
+# block bodies
+# ----------------------------------------------------------------------------
+
+def _subtree(p: dict, prefix: str) -> dict:
+    n = len(prefix)
+    return {k[n:]: v for k, v in p.items() if k.startswith(prefix)}
+
+
+def _attn_mlp_block(cfg, run, p, x, positions, cache, cache_pos, *, use_moe):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    apply = mla_apply if cfg.mla is not None else gqa_apply
+    h, new_cache = apply(cfg, run, p, "attn/", h, positions, cache, cache_pos)
+    x = x + h
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if use_moe:
+        h, aux = moe_mod.moe_apply(cfg, p, "moe/", h,
+                                   groups=getattr(run, "moe_groups", None),
+                                   dense_eval=getattr(run, "moe_dense_eval",
+                                                      False))
+    else:
+        h, aux = mlp_apply(p, "mlp/", h, x.dtype), jnp.float32(0)
+    return x + h, new_cache, aux
+
+
+def _rwkv_block(cfg, p, x, cache):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    h, c1 = rwkv_mod.time_mix_apply(cfg, p, "mix/", h, cache)
+    x = x + h
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    h, c2 = rwkv_mod.channel_mix_apply(cfg, p, "mix/", h, cache)
+    new_cache = None if cache is None else {**c1, **c2}
+    return x + h, new_cache
+
+
+def _mamba_block(cfg, p, x, cache):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    h, new_cache = ssm_mod.ssm_apply(cfg, p, "ssm/", h, cache)
+    return x + h, new_cache
+
+
+# ----------------------------------------------------------------------------
+# cache construction
+# ----------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Decode cache pytree (zeros). Layout mirrors forward()'s expectations."""
+    d = cfg.d_model
+    if cfg.rwkv is not None:
+        H, D = d // cfg.rwkv.head_dim, cfg.rwkv.head_dim
+        L = cfg.n_layers
+        return {
+            "state": jnp.zeros((L, batch, H, D, D), jnp.float32),
+            "x_tm": jnp.zeros((L, batch, d), dtype),
+            "x_cm": jnp.zeros((L, batch, d), dtype),
+        }
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        n_super, per, n_tail = zamba_plan(cfg)
+        di = s.expand * d
+        H = di // s.head_dim
+        gn = s.n_groups * s.d_state
+        kvf = cfg.n_kv_heads * cfg.resolved_head_dim
+
+        def mamba_cache(lead):
+            return {
+                "conv_x": jnp.zeros((*lead, batch, s.conv_width - 1, di), dtype),
+                "conv_B": jnp.zeros((*lead, batch, s.conv_width - 1, gn), dtype),
+                "conv_C": jnp.zeros((*lead, batch, s.conv_width - 1, gn), dtype),
+                "state": jnp.zeros((*lead, batch, H, s.head_dim, gn), jnp.float32),
+            }
+
+        return {
+            "mamba": mamba_cache((n_super, per)),
+            "attn": AttnCache(
+                k=jnp.zeros((n_super, batch, max_seq, kvf), dtype),
+                v=jnp.zeros((n_super, batch, max_seq, kvf), dtype),
+                pos=jnp.full((n_super, batch, max_seq), 2**30, jnp.int32)),
+            "tail": [mamba_cache(()) for _ in range(n_tail)],
+        }
+    if cfg.mla is not None:
+        m = cfg.mla
+        L = cfg.n_layers - cfg.moe.first_dense_layers if cfg.moe else cfg.n_layers
+        cache = {"layers": MLACache(
+            ckv=jnp.zeros((L, batch, max_seq, m.kv_lora_rank), dtype),
+            krope=jnp.zeros((L, batch, max_seq, m.rope_head_dim), dtype),
+            pos=jnp.full((L, batch, max_seq), 2**30, jnp.int32))}
+        first = cfg.moe.first_dense_layers if cfg.moe else 0
+        for i in range(first):
+            cache[f"dense{i}"] = MLACache(
+                ckv=jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+                krope=jnp.zeros((batch, max_seq, m.rope_head_dim), dtype),
+                pos=jnp.full((batch, max_seq), 2**30, jnp.int32))
+        return cache
+    kvf = cfg.n_kv_heads * cfg.resolved_head_dim
+    seq = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    first = cfg.moe.first_dense_layers if cfg.moe else 0
+    L = cfg.n_layers - first
+    cache = {"layers": AttnCache(k=jnp.zeros((L, batch, seq, kvf), dtype),
+                                 v=jnp.zeros((L, batch, seq, kvf), dtype),
+                                 pos=jnp.full((L, batch, seq), 2**30, jnp.int32))}
+    for i in range(first):
+        cache[f"dense{i}"] = AttnCache(k=jnp.zeros((batch, seq, kvf), dtype),
+                                       v=jnp.zeros((batch, seq, kvf), dtype),
+                                       pos=jnp.full((batch, seq), 2**30, jnp.int32))
+    return cache
+
+
+def cache_logical(cfg: ModelConfig, batch_shardable: bool, seq_shard: bool):
+    """Logical axes per cache leaf (same structure as init_cache output)."""
+    b = "batch" if batch_shardable else None
+    s = "kv_seq" if seq_shard else None
+    if cfg.rwkv is not None:
+        return {"state": ("layers", b, None, None, None),
+                "x_tm": ("layers", b, None), "x_cm": ("layers", b, None)}
+    if cfg.ssm is not None:
+        n_super, per, n_tail = zamba_plan(cfg)
+
+        def mamba_log(extra):
+            return {"conv_x": (*extra, b, None, "ff"),
+                    "conv_B": (*extra, b, None, None),
+                    "conv_C": (*extra, b, None, None),
+                    "state": (*extra, b, None, None, None)}
+
+        return {"mamba": mamba_log(("layers", None)),
+                "attn": AttnCache(k=("layers", b, s, "kv_flat"),
+                                  v=("layers", b, s, "kv_flat"),
+                                  pos=("layers", b, s)),
+                "tail": [mamba_log(()) for _ in range(n_tail)]}
+    if cfg.mla is not None:
+        first = cfg.moe.first_dense_layers if cfg.moe else 0
+        sm = "mla_seq"  # compressed KV shards over seq on the model axis
+        out = {"layers": MLACache(ckv=("layers", b, sm, None),
+                                  krope=("layers", b, sm, None),
+                                  pos=("layers", b, sm))}
+        for i in range(first):
+            out[f"dense{i}"] = MLACache(ckv=(b, sm, None), krope=(b, sm, None),
+                                        pos=(b, sm))
+        return out
+    first = cfg.moe.first_dense_layers if cfg.moe else 0
+    out = {"layers": AttnCache(k=("layers", b, s, "kv_flat"),
+                               v=("layers", b, s, "kv_flat"),
+                               pos=("layers", b, s))}
+    for i in range(first):
+        out[f"dense{i}"] = AttnCache(k=(b, s, "kv_flat"), v=(b, s, "kv_flat"),
+                                     pos=(b, s))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# forward
+# ----------------------------------------------------------------------------
+
+def make_forward(cfg: ModelConfig, run: RunConfig, mesh=None, rules=None):
+    """Returns forward(params, tokens, positions, prefix_embeds, cache,
+    cache_pos) -> (logits, new_cache, aux)."""
+
+    def constrain(x, logical):
+        if mesh is None or rules is None:
+            return x
+        from ..sharding.partition import constrain as _c
+        return _c(x, mesh, rules, logical)
+
+    remat = run.remat != "none"
+    policy = None
+    if run.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+
+    def maybe_ckpt(fn):
+        if remat:
+            return jax.checkpoint(fn, policy=policy, prevent_cse=False)
+        return fn
+
+    batch_logical = ("batch", "seq", "act_embed")
+
+    def forward(params, tokens, positions, prefix_embeds=None, cache=None,
+                cache_pos=None, decode=False):
+        dtype = jnp.dtype(run.compute_dtype)
+        x = params["embed"].astype(dtype)[tokens]
+        if prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
+            P = prefix_embeds.shape[1]
+            ppos = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32)[None],
+                                    (x.shape[0], P))
+            positions = jnp.concatenate([ppos, positions + P], axis=1)
+        x = constrain(x, batch_logical)
+        aux_total = jnp.float32(0)
+        new_cache = {} if cache is not None else None
+        cp = cache_pos if cache_pos is not None else 0
+
+        if cfg.rwkv is not None:
+            lp = _subtree(params, "layers/")
+
+            def body(carry, xs):
+                x, aux = carry
+                p_l, c_l = xs
+                x, nc = _rwkv_block(cfg, p_l, x, c_l)
+                x = constrain(x, batch_logical)
+                return (x, aux), nc
+
+            body = maybe_ckpt(body)
+            cs = cache if cache is not None else None
+            (x, aux_total), ncs = jax.lax.scan(body, (x, aux_total), (lp, cs))
+            if cache is not None:
+                new_cache = ncs
+        elif cfg.ssm is not None:
+            n_super, per, n_tail = zamba_plan(cfg)
+            lp = _subtree(params, "layers/")
+            lp_super = jax.tree.map(
+                lambda a: a.reshape(n_super, per, *a.shape[1:]), lp)
+            sp = _subtree(params, "shared/")
+
+            def super_body(carry, xs):
+                x, aux = carry
+                p_s, c_mamba, c_attn = xs
+
+                def mamba_body(carry2, xs2):
+                    x2, = carry2
+                    p_l, c_l = xs2
+                    x2, nc = _mamba_block(cfg, p_l, x2, c_l)
+                    return (x2,), nc
+
+                (x,), nc_mamba = jax.lax.scan(mamba_body, (x,), (p_s, c_mamba))
+                x, nc_attn, aux_l = _attn_mlp_block(
+                    cfg, run, sp, x, positions, c_attn, cp, use_moe=False)
+                x = constrain(x, batch_logical)
+                return (x, aux + aux_l), (nc_mamba, nc_attn)
+
+            super_body = maybe_ckpt(super_body)
+            c_mamba = cache["mamba"] if cache is not None else None
+            c_attn = cache["attn"] if cache is not None else None
+            (x, aux_total), (ncm, nca) = jax.lax.scan(
+                super_body, (x, aux_total), (lp_super, c_mamba, c_attn))
+            for t in range(n_tail):
+                tp = _subtree(params, f"tail{t}/")
+                c_t = cache["tail"][t] if cache is not None else None
+                x, nct = _mamba_block(cfg, tp, x, c_t)
+                if cache is not None:
+                    new_cache.setdefault("tail", []).append(nct)
+            if cache is not None:
+                new_cache.update({"mamba": ncm, "attn": nca})
+                new_cache.setdefault("tail", [])
+        else:
+            use_moe = cfg.moe is not None
+            first = cfg.moe.first_dense_layers if use_moe else 0
+            for i in range(first):
+                dp = _subtree(params, f"dense{i}/")
+                c_i = cache[f"dense{i}"] if cache is not None else None
+                x, nci, aux_l = _attn_mlp_block(cfg, run, dp, x, positions,
+                                                c_i, cp, use_moe=False)
+                aux_total += aux_l
+                if cache is not None:
+                    new_cache[f"dense{i}"] = nci
+            lp = _subtree(params, "layers/")
+
+            def body(carry, xs):
+                x, aux = carry
+                p_l, c_l = xs
+                x, nc, aux_l = _attn_mlp_block(cfg, run, p_l, x, positions,
+                                               c_l, cp, use_moe=use_moe)
+                x = constrain(x, batch_logical)
+                return (x, aux + aux_l), nc
+
+            body = maybe_ckpt(body)
+            c_layers = cache["layers"] if cache is not None else None
+            (x, aux_total), ncs = jax.lax.scan(body, (x, aux_total),
+                                               (lp, c_layers))
+            if cache is not None:
+                new_cache["layers"] = ncs
+
+        x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+        unembed = (params["embed"].T if cfg.tie_embeddings
+                   else params["unembed"])
+        logits = (x.astype(jnp.float32) @ unembed.astype(jnp.float32))
+        logits = constrain(logits, ("batch", "seq", "logit_vocab"))
+        return logits, new_cache, aux_total
+
+    return forward

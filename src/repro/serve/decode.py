@@ -1,0 +1,66 @@
+"""Serving steps: batched prefill and single-token decode over caches.
+
+``serve_step`` is what the decode-shaped dry-run cells lower: one new token
+per request against a ``seq_len``-deep KV/state cache.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..config.base import ModelConfig, RunConfig
+from ..models.transformer import make_forward
+
+
+def make_prefill_step(cfg: ModelConfig, run: RunConfig, mesh=None, rules=None):
+    fwd = make_forward(cfg, run, mesh, rules)
+
+    def prefill_step(params, tokens, positions=None, prefix_embeds=None):
+        B, T = tokens.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None],
+                                         (B, T))
+        logits, _, _ = fwd(params, tokens, positions,
+                           prefix_embeds=prefix_embeds)
+        return logits
+
+    return prefill_step
+
+
+def make_prefill_cache_step(cfg: ModelConfig, run: RunConfig, mesh=None,
+                            rules=None):
+    """Prefill that also populates the decode cache (example/serving path)."""
+    fwd = make_forward(cfg, run, mesh, rules)
+
+    def prefill(params, tokens, cache, prefix_embeds=None):
+        B, T = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None],
+                                     (B, T))
+        logits, new_cache, _ = fwd(params, tokens, positions,
+                                   prefix_embeds=prefix_embeds, cache=cache,
+                                   cache_pos=0)
+        return logits, new_cache
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig, run: RunConfig, mesh=None, rules=None,
+                    *, greedy: bool = True):
+    fwd = make_forward(cfg, run, mesh, rules)
+
+    def serve_step(params, cache, tokens, cache_pos, rng: Optional[jax.Array] = None):
+        """tokens: (B, 1) the newly generated token; cache_pos: () int32."""
+        B = tokens.shape[0]
+        positions = jnp.full((B, 1), cache_pos, jnp.int32)
+        logits, new_cache, _ = fwd(params, tokens, positions, cache=cache,
+                                   cache_pos=cache_pos)
+        logits = logits[:, -1]
+        if greedy or rng is None:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(rng, logits).astype(jnp.int32)
+        return nxt[:, None], new_cache, logits
+
+    return serve_step

@@ -1,0 +1,6 @@
+from .optimizer import adamw_init, adamw_update, OptState
+from .train_step import make_loss_fn, make_train_step
+from .checkpoint import CheckpointManager
+
+__all__ = ["CheckpointManager", "OptState", "adamw_init", "adamw_update",
+           "make_loss_fn", "make_train_step"]

@@ -1,0 +1,67 @@
+"""Elastic scaling + straggler mitigation utilities.
+
+On a real fleet these hook into the cluster manager; everything here is the
+device-count-agnostic logic that CAN run (and is tested) in this container:
+
+  * ``reshard_tree``      — move any pytree onto a new mesh's shardings
+                            (checkpoint-free pod-loss recovery when the
+                            arrays still exist; checkpointed recovery path
+                            is train/checkpoint.py).
+  * ``StepWatchdog``      — per-step wall-time tracker that flags stragglers
+                            (steps > k x rolling median) and exposes the
+                            skip/requeue decision the launcher acts on.
+  * ``plan_elastic_mesh`` — given surviving device count, pick the largest
+                            (data, model) grid that preserves the model axis
+                            (TP degree must not change; DP shrinks).
+"""
+from __future__ import annotations
+
+import collections
+import statistics
+import time
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+
+def reshard_tree(tree, mesh: Mesh, specs):
+    """device_put every leaf with its spec on the (new) mesh."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs)
+
+
+def plan_elastic_mesh(n_devices: int, model_parallel: int = 16):
+    """Largest (data, model) grid keeping TP fixed; DP absorbs the loss."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"need >= {model_parallel} devices to preserve TP degree")
+    data = n_devices // model_parallel
+    return (data, model_parallel)
+
+
+class StepWatchdog:
+    """Flags straggling steps; on a fleet the launcher swaps in hot spares."""
+
+    def __init__(self, factor: float = 3.0, window: int = 32):
+        self.factor = factor
+        self.times = collections.deque(maxlen=window)
+        self._t0 = None
+        self.stragglers: list[tuple[int, float]] = []
+
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def stop(self, step: int) -> bool:
+        dt = time.monotonic() - self._t0
+        is_straggler = False
+        if len(self.times) >= 8:
+            med = statistics.median(self.times)
+            if dt > self.factor * med:
+                self.stragglers.append((step, dt))
+                is_straggler = True
+        self.times.append(dt)
+        return is_straggler
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self.times) if self.times else 0.0

@@ -1,0 +1,98 @@
+"""AdamW with decoupled weight decay, global-norm clipping, cosine schedule.
+
+Optimizer state is sharded identically to the parameters (the rules table
+maps each moment to its parameter's spec), which under GSPMD is the ZeRO-3
+equivalent: every device holds only its (1/data x 1/model) slice of m and v.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..config.base import RunConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array  # () int32
+    m: dict
+    v: dict
+
+
+def adamw_init(params: dict) -> OptState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree.map(jnp.zeros_like, params))
+
+
+def cosine_schedule(step, base_lr, warmup=100, total=10_000, min_frac=0.1):
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / warmup
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, base_lr * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+_NO_DECAY_SUBSTRINGS = ("ln", "norm", "bias", "b_", "/b", "mu_", "A_log", "dt_bias", "/u", "/D")
+
+
+def _decay_mask(path: str) -> bool:
+    return not any(s in path for s in _NO_DECAY_SUBSTRINGS)
+
+
+def adamw_update(params: dict, grads: dict, opt: OptState, run: RunConfig,
+                 *, total_steps: int = 10_000, warmup: int = 100):
+    grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+    step = opt.step + 1
+    lr = cosine_schedule(step, run.learning_rate, total=total_steps,
+                         warmup=warmup)
+    b1, b2, eps = run.adam_b1, run.adam_b2, 1e-8
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    new_params, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k].astype(jnp.float32)
+        m = b1 * opt.m[k] + (1 - b1) * g
+        v = b2 * opt.v[k] + (1 - b2) * jnp.square(g)
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if _decay_mask(k):
+            upd = upd + run.weight_decay * params[k].astype(jnp.float32)
+        new_params[k] = (params[k].astype(jnp.float32) - lr * upd).astype(params[k].dtype)
+        new_m[k] = m
+        new_v[k] = v
+    return new_params, OptState(step=step, m=new_m, v=new_v), {
+        "grad_norm": gnorm, "lr": lr}
+
+
+# --- gradient compression (int8 quantize/dequantize with stochastic rounding)
+
+def compress_grads_int8(grads: dict, key: jax.Array) -> dict:
+    """Per-tensor int8 quantization round-trip.
+
+    On a real fleet this wraps the cross-replica all-reduce (4x less ICI
+    traffic per gradient sync); here the quantize->dequantize round-trip is
+    applied at the same point in the dataflow so its *numerical* effect on
+    training is exactly reproduced and testable.
+    """
+    out = {}
+    for i, k in enumerate(sorted(grads)):
+        g = grads[k].astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        sub = jax.random.fold_in(key, i)
+        noise = jax.random.uniform(sub, g.shape, minval=-0.5, maxval=0.5)
+        q = jnp.clip(jnp.round(g / scale + noise), -127, 127).astype(jnp.int8)
+        out[k] = q.astype(jnp.float32) * scale
+    return out

@@ -1,0 +1,88 @@
+"""Train-step factory: CE loss, microbatch accumulation, remat, compression.
+
+``make_train_step`` returns a pure function suitable for ``jax.jit`` with
+sharded params/opt-state; the data-parallel gradient reduction is implicit
+in GSPMD (it shows up as reduce-scatter/all-reduce collectives in the
+lowered HLO, which the roofline analysis in launch/roofline.py parses).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..config.base import ModelConfig, RunConfig
+from ..models.transformer import make_forward
+from .optimizer import OptState, adamw_update, compress_grads_int8
+
+
+def make_loss_fn(cfg: ModelConfig, run: RunConfig, mesh=None, rules=None):
+    fwd = make_forward(cfg, run, mesh, rules)
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]  # (B, T+1)
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        B, T = inputs.shape
+        # positions as *runtime* data when provided: keeps XLA from
+        # constant-folding causal masks into giant per-iteration buffers.
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None],
+                                         (B, T))
+        prefix = batch.get("prefix_embeds")
+        logits, _, aux = fwd(params, inputs, positions, prefix_embeds=prefix)
+        if prefix is not None:
+            logits = logits[:, prefix.shape[1]:]
+        logits = logits.astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        ce = -jnp.mean(ll)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, run: RunConfig, mesh=None, rules=None,
+                    *, microbatch: Optional[int] = None,
+                    total_steps: int = 10_000, warmup: int = 100):
+    loss_fn = make_loss_fn(cfg, run, mesh, rules)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: OptState, batch):
+        if microbatch and microbatch > 1:
+            n = microbatch
+
+            def resh(x):
+                return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+
+            micro = jax.tree.map(resh, batch)
+
+            def acc_body(carry, mb):
+                gacc, lacc = carry
+                (loss, mets), grads = grad_fn(params, mb)
+                gacc = jax.tree.map(jnp.add, gacc, grads)
+                return (gacc, lacc + loss), mets
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), mets = jax.lax.scan(acc_body, (g0, jnp.float32(0)),
+                                              micro)
+            grads = jax.tree.map(lambda g: g / n, gsum)
+            loss = lsum / n
+            metrics = jax.tree.map(lambda m: m.mean(), mets)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        if run.grad_compression == "int8":
+            key = jax.random.fold_in(jax.random.PRNGKey(17), opt_state.step)
+            grads = compress_grads_int8(grads, key)
+
+        params, opt_state, opt_mets = adamw_update(params, grads, opt_state,
+                                                   run, total_steps=total_steps,
+                                                   warmup=warmup)
+        metrics = {**metrics, **opt_mets, "loss": loss}
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,93 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (brute_force_census, from_edges, pack_tasks,
+                        triad_census)
+from repro.core.census import canonical_dyads
+from repro.data import SyntheticTokens
+
+
+def _graph_strategy(max_n=24, max_m=80):
+    return st.integers(6, max_n).flatmap(
+        lambda n: st.tuples(
+            st.just(n),
+            st.lists(st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+                     min_size=1, max_size=max_m)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(_graph_strategy())
+def test_census_equals_brute_force(data):
+    n, edges = data
+    src = [e[0] for e in edges]
+    dst = [e[1] for e in edges]
+    g = from_edges(n, src, dst)
+    if g.n_dyads == 0:
+        return
+    assert (triad_census(g, batch=16).counts
+            == brute_force_census(g).counts).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(_graph_strategy(), st.integers(0, 10_000))
+def test_census_is_isomorphism_invariant(data, perm_seed):
+    """Relabeling vertices must not change the census."""
+    n, edges = data
+    src = np.array([e[0] for e in edges])
+    dst = np.array([e[1] for e in edges])
+    g = from_edges(n, src, dst)
+    if g.n_dyads == 0:
+        return
+    perm = np.random.default_rng(perm_seed).permutation(n)
+    g2 = from_edges(n, perm[src], perm[dst])
+    assert (triad_census(g, batch=16).counts
+            == triad_census(g2, batch=16).counts).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(_graph_strategy())
+def test_isolated_vertex_adds_only_null_and_dyadic(data):
+    """Appending an isolated vertex adds exactly C(n,2) triads, all of
+    which contain it and are null or dyadic."""
+    n, edges = data
+    src = [e[0] for e in edges]
+    dst = [e[1] for e in edges]
+    g = from_edges(n, src, dst)
+    g2 = from_edges(n + 1, src, dst)
+    if g.n_dyads == 0:
+        return
+    c1 = triad_census(g, batch=16).counts
+    c2 = triad_census(g2, batch=16).counts
+    # connected-triad classes (types 4..16, idx 3..15) must be unchanged
+    assert (c1[3:] == c2[3:]).all()
+    assert c2.sum() - c1.sum() == n * (n - 1) // 2
+
+
+@settings(max_examples=15, deadline=None)
+@given(_graph_strategy(), st.integers(2, 7))
+def test_pack_tasks_exact_partition(data, n_shards):
+    n, edges = data
+    g = from_edges(n, [e[0] for e in edges], [e[1] for e in edges])
+    if g.n_dyads == 0:
+        return
+    u, v = canonical_dyads(g)
+    want = sorted(zip(u.tolist(), v.tolist()))
+    for strat in ("greedy_sequential", "sorted_snake", "greedy_lpt"):
+        t = pack_tasks(g, n_shards, strategy=strat)
+        got = sorted((int(a), int(b)) for a, b, m in
+                     zip(t.u.ravel(), t.v.ravel(), t.valid.ravel()) if m)
+        assert got == want
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+def test_data_pipeline_deterministic_and_sharded(seed, n_shards):
+    gb = 8
+    full = SyntheticTokens(vocab_size=97, seq_len=16, global_batch=gb,
+                           seed=seed)
+    b0 = full.batch_at(3)
+    b1 = SyntheticTokens(vocab_size=97, seq_len=16, global_batch=gb,
+                         seed=seed).batch_at(3)
+    assert (b0 == b1).all()
+    assert b0.max() < 97 and b0.min() >= 0

@@ -1,0 +1,62 @@
+"""Roofline HLO walker: known-FLOPs modules and loop multipliers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import roofline as R
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_dot_flops_counted():
+    m, k, n = 256, 512, 128
+    c = _compile(lambda a, b: a @ b,
+                 jnp.zeros((m, k)), jnp.zeros((k, n)))
+    acc = R.analyze_hlo(c.as_text())
+    assert abs(acc["flops"] - 2 * m * k * n) / (2 * m * k * n) < 0.01
+
+
+def test_scan_multiplies_flops():
+    m = 128
+    w = jnp.eye(m)
+
+    def body(x, _):
+        return x @ w, None
+
+    def f(x):
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    c = _compile(f, jnp.zeros((m, m)))
+    acc = R.analyze_hlo(c.as_text())
+    want = 10 * 2 * m ** 3
+    assert abs(acc["flops"] - want) / want < 0.05, acc["flops"]
+
+
+def test_bytes_positive_and_bounded():
+    x = jnp.zeros((1024, 1024))
+    c = _compile(lambda a: (a * 2 + 1).sum(), x)
+    acc = R.analyze_hlo(c.as_text())
+    nbytes = 1024 * 1024 * 4
+    assert nbytes * 0.5 <= acc["bytes"] <= nbytes * 6
+
+
+def test_model_flops_formulae():
+    meta = {"active_params": 1e9, "kind": "train", "global_batch": 4,
+            "seq_len": 128}
+    assert R.model_flops(meta) == 6e9 * 4 * 128
+    meta["kind"] = "decode"
+    assert R.model_flops(meta) == 2e9 * 4
+    meta["kind"] = "prefill"
+    assert R.model_flops(meta) == 2e9 * 4 * 128
+
+
+def test_terms_and_bottleneck():
+    t = R.roofline_terms(197e12, 819e9 * 2, 50e9 * 3)
+    assert t["compute_s"] == 1.0
+    assert t["memory_s"] == 2.0
+    assert t["collective_s"] == 3.0
+    assert t["bottleneck"] == "collective_s"
+    assert t["step_s_lower_bound"] == 3.0

@@ -1,0 +1,98 @@
+"""End-to-end behaviour tests for the framework."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import RunConfig, get_config, list_configs
+from repro.data import SyntheticTokens
+from repro.models import transformer as tfm
+from repro.train import adamw_init, make_train_step
+
+
+def test_all_archs_registered():
+    assert len(list_configs()) == 10
+    for name in list_configs():
+        cfg = get_config(name)
+        smoke = get_config(name, smoke=True)
+        assert cfg.name == name
+        assert smoke.param_count() < 10_000_000
+
+
+def test_param_counts_match_published_sizes():
+    expect = {
+        "zamba2-1.2b": (1.2, 0.25),
+        "qwen1.5-4b": (3.95, 0.15),
+        "qwen3-4b": (4.0, 0.15),
+        "deepseek-coder-33b": (33.0, 0.1),
+        "pixtral-12b": (12.0, 0.1),
+        "deepseek-v2-236b": (236.0, 0.05),
+        "granite-moe-3b-a800m": (3.3, 0.15),
+        "rwkv6-3b": (3.1, 0.2),
+    }
+    for arch, (b, tol) in expect.items():
+        n = get_config(arch).param_count() / 1e9
+        assert abs(n - b) / b < tol, (arch, n, b)
+
+
+def test_train_loop_learns():
+    import dataclasses
+    cfg = dataclasses.replace(get_config("qwen3-4b", smoke=True),
+                              vocab_size=64)
+    run = RunConfig(attention_impl="chunked_causal", attention_chunk=16,
+                    remat="full", learning_rate=1e-3)
+    params = tfm.init_model(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, run, microbatch=2, warmup=5))
+    ds = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8)
+    losses = []
+    for i in range(25):
+        params, opt, mets = step(params, opt,
+                                 {"tokens": jnp.asarray(ds.batch_at(i))})
+        losses.append(float(mets["loss"]))
+    assert losses[-1] < losses[0] - 0.2, losses[::6]
+    assert np.isfinite(losses).all()
+
+
+def test_grad_compression_still_learns():
+    import dataclasses
+    cfg = dataclasses.replace(get_config("qwen3-4b", smoke=True),
+                              vocab_size=64)
+    run = RunConfig(attention_impl="chunked_causal", attention_chunk=16,
+                    remat="none", learning_rate=1e-3, grad_compression="int8")
+    params = tfm.init_model(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, run, warmup=5))
+    ds = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8)
+    losses = []
+    for i in range(25):
+        params, opt, mets = step(params, opt,
+                                 {"tokens": jnp.asarray(ds.batch_at(i))})
+        losses.append(float(mets["loss"]))
+    assert losses[-1] < losses[0] - 0.15, losses[::6]
+
+
+def test_microbatch_matches_full_batch_grads():
+    """Gradient accumulation must average to the full-batch gradient."""
+    from repro.train.train_step import make_loss_fn
+    cfg = get_config("musicgen-large", smoke=True)
+    run = RunConfig(attention_impl="dense", remat="none",
+                    compute_dtype="float32")
+    params = tfm.init_model(cfg, jax.random.PRNGKey(1))
+    ds = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=16, global_batch=8)
+    batch = {"tokens": jnp.asarray(ds.batch_at(0))}
+    loss_fn = make_loss_fn(cfg, run)
+    (_, _), g_full = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    n = 4
+    micro = jax.tree.map(lambda x: x.reshape(n, -1, *x.shape[1:]), batch)
+    g_acc = jax.tree.map(jnp.zeros_like, g_full)
+    for i in range(n):
+        mb = jax.tree.map(lambda x: x[i], micro)
+        (_, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        g_acc = jax.tree.map(jnp.add, g_acc, g)
+    g_acc = jax.tree.map(lambda x: x / n, g_acc)
+    errs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), g_full, g_acc)
+    assert max(jax.tree.leaves(errs)) < 1e-4, sorted(
+        errs.items(), key=lambda kv: -kv[1])[:3]

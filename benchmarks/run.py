@@ -41,9 +41,9 @@ def bench_census_versions(scale: float):
     v0.5 analogue: degree bucketing in the Pallas kernel path.
     """
     import math
-    from repro.core import generators, triad_census
+    from repro.core import generators
     from repro.core.census import (canonical_dyads, make_census_batch_fn,
-                                   make_member_fn, pad_dyads)
+                                   pad_dyads)
 
     g = generators.paper_profile("slashdot", scale_down=64 / scale)
     u, v = canonical_dyads(g)
@@ -157,15 +157,49 @@ def bench_kernel(scale: float):
     shared-memory census per thread block) vs the XLA binary-search path.
     NOTE: kernel timings on CPU are interpret-mode (python) — structural
     only; real comparisons need a TPU."""
-    from repro.core import generators, triad_census
-    from repro.kernels.ops import triad_census_kernel
+    from repro.core import generators
+    from repro.engine import CensusConfig, compile_census
 
     g = generators.paper_profile("eatSR", scale_down=64 / scale)
-    t_xla = _timeit(lambda: triad_census(g, batch=256).counts, reps=1)
-    t_krn = _timeit(lambda: triad_census_kernel(g, block=32,
-                                                buckets=(64, 256)), reps=1)
+    xla = compile_census(g, CensusConfig(backend="xla", batch=256))
+    krn = compile_census(g, CensusConfig(backend="pallas", batch=32,
+                                         buckets=(64, 256)))
+    t_xla = _timeit(lambda: xla.run(g).counts, reps=1)
+    t_krn = _timeit(lambda: krn.run(g).counts, reps=1)
     print(f"census_xla_binary_search,{t_xla:.0f},cpu_wallclock")
     print(f"census_pallas_kernel,{t_krn:.0f},interpret_mode_structural_only")
+
+
+def bench_engine_cache(scale: float):
+    """The serving metric the north-star cares about: cold compile+run vs
+    warm plan-cache-hit census latency on a same-shape graph."""
+    from repro.core import generators
+    from repro.engine import (CensusConfig, GraphMeta, clear_plan_cache,
+                              compile_census, plan_cache_stats)
+
+    g = generators.paper_profile("slashdot", scale_down=128 / scale)
+    g_warm = generators.paper_profile("slashdot", scale_down=128 / scale,
+                                      seed=1)
+    if GraphMeta.from_graph(g_warm) != GraphMeta.from_graph(g):
+        g_warm = g  # different realization crossed a pow2 bucket: reuse g
+    cfg = CensusConfig(backend="xla", batch=256)
+
+    clear_plan_cache()
+    t0 = time.perf_counter()
+    plan = compile_census(g, cfg)
+    plan.run(g)
+    t_cold = (time.perf_counter() - t0) * 1e6
+
+    t0 = time.perf_counter()
+    plan2 = compile_census(g_warm, cfg)  # same shape buckets -> cache hit
+    plan2.run(g_warm)
+    t_warm = (time.perf_counter() - t0) * 1e6
+
+    stats = plan_cache_stats()
+    assert plan2 is plan and stats["hits"] >= 1, stats
+    print(f"engine_census_cold_compile,{t_cold:.0f},traces={plan.stats['traces']}")
+    print(f"engine_census_warm_cache_hit,{t_warm:.0f},speedup="
+          f"{t_cold / max(t_warm, 1e-9):.2f}x")
 
 
 def bench_lm_smoke(scale: float):
@@ -201,6 +235,7 @@ def main() -> None:
         "accumulators": bench_accumulators,
         "scaling": bench_scaling,
         "kernel": bench_kernel,
+        "engine_cache": bench_engine_cache,
         "lm_smoke": bench_lm_smoke,
     }
     only = [s for s in args.only.split(",") if s]

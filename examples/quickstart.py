@@ -6,8 +6,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import RunConfig, get_config
-from repro.core import generators, pack_tasks, triad_census
+from repro.core import generators, pack_tasks
 from repro.core.triad_table import TRIAD_NAMES
+from repro.engine import CensusConfig, compile_census, plan_cache_stats
 from repro.data import SyntheticTokens
 from repro.models import transformer as tfm
 from repro.train import adamw_init, make_train_step
@@ -17,7 +18,13 @@ def census_demo():
     print("== Triad census on an R-MAT power-law digraph ==")
     g = generators.rmat(10, edge_factor=8, seed=0)
     print(f"graph: n={g.n} arcs={g.m} max_deg={g.max_deg} dyads={g.n_dyads}")
-    res = triad_census(g)
+    plan = compile_census(g, CensusConfig(backend="auto"))
+    res = plan.run(g)
+    # a same-shape graph reuses the compiled plan (the serving hot path)
+    g2 = generators.rmat(10, edge_factor=8, seed=1)
+    res2 = compile_census(g2, CensusConfig(backend="auto")).run(g2)
+    print(f"second same-shape census: total={res2.total:,}; "
+          f"plan cache: {plan_cache_stats()}")
     for name, c in zip(TRIAD_NAMES, res.counts):
         if c:
             print(f"  {name:5s} {c:>14,}")

@@ -10,10 +10,10 @@ the SNA statistics the census exists for (transitivity, reciprocity).
 import argparse
 
 import jax
-import numpy as np
 
-from repro.core import distributed_triad_census, generators
+from repro.core import generators
 from repro.core.triad_table import TRIAD_NAMES
+from repro.engine import CensusConfig, compile_census
 
 
 def main():
@@ -32,10 +32,12 @@ def main():
     print(f"dataset={args.dataset} (R-MAT stand-in) n={g.n} m={g.m} "
           f"devices={n_dev}")
 
-    res, tasks = distributed_triad_census(
-        g, mesh, strategy=args.strategy, weight_model=args.weights)
+    cfg = CensusConfig(backend="distributed", strategy=args.strategy,
+                       weight_model=args.weights)
+    plan = compile_census(g, cfg, mesh=mesh)
+    res = plan.run(g)
     print(f"load imbalance ({args.strategy}/{args.weights}): "
-          f"{tasks.imbalance:.4f}")
+          f"{plan.last_task_stats.imbalance:.4f}")
     print("\ntriad census:")
     for name, c in zip(TRIAD_NAMES, res.counts):
         print(f"  {name:5s} {c:>16,}")

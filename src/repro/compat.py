@@ -1,0 +1,40 @@
+"""Version-portability shims for the installed JAX.
+
+The repo targets the modern ``jax.shard_map`` API (with ``check_vma``) but
+must also run on JAX 0.4.x where SPMD mapping lives in
+``jax.experimental.shard_map`` (with ``check_rep``) and ``jax.lax.pvary``
+does not exist.  Everything that shard-maps goes through this module so the
+version split lives in exactly one place.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "pvary"]
+
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        # pre-0.5 spelling: replication checking is ``check_rep``.  The
+        # checker predates ``pvary`` so code written for the modern API
+        # (where unmapped inputs must be explicitly varied) trips false
+        # positives; callers here always opt out.
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+
+if hasattr(jax.lax, "pvary"):
+    pvary = jax.lax.pvary
+else:
+
+    def pvary(x, axis_name):
+        """No-op fallback: pre-0.5 shard_map has no varying-manual types."""
+        return x

@@ -1,4 +1,10 @@
-"""Core library: the paper's Triad Census technique as a JAX module."""
+"""Core library: the paper's Triad Census technique as a JAX module.
+
+The public census entry point is :mod:`repro.engine`
+(``compile_census(graph, CensusConfig(...)).run(graph)``); its names are
+re-exported here lazily.  ``triad_census`` / ``distributed_triad_census``
+remain as deprecated shims over the engine.
+"""
 from .census import (CensusResult, brute_force_census, canonical_dyads,
                      make_census_fn, triad_census)
 from .balance import ShardedTasks, dyad_weights, exact_s_sizes, pack_tasks
@@ -6,10 +12,22 @@ from .distributed import distributed_triad_census, make_distributed_census_fn
 from .graph import CSRGraph, GraphArrays, from_edges, load_pajek_or_edgelist
 from .triad_table import TRIAD_NAMES, TRIAD_TABLE_64
 
+_ENGINE_EXPORTS = ("CensusConfig", "CensusPlan", "GraphMeta",
+                   "clear_plan_cache", "compile_census", "plan_cache_stats")
+
 __all__ = [
     "CensusResult", "CSRGraph", "GraphArrays", "ShardedTasks", "TRIAD_NAMES",
     "TRIAD_TABLE_64", "brute_force_census", "canonical_dyads",
     "distributed_triad_census", "dyad_weights", "exact_s_sizes", "from_edges",
     "load_pajek_or_edgelist", "make_census_fn", "make_distributed_census_fn",
-    "pack_tasks", "triad_census",
+    "pack_tasks", "triad_census", *_ENGINE_EXPORTS,
 ]
+
+
+def __getattr__(name):
+    # lazy re-export: repro.engine itself imports repro.core submodules, so
+    # an eager import here would be circular.
+    if name in _ENGINE_EXPORTS:
+        from .. import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

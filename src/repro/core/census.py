@@ -1,5 +1,11 @@
 """Vectorized sub-quadratic Triad Census (Batagelj–Mrvar, paper Fig. 2.4/2.5).
 
+The public entry point now lives in :mod:`repro.engine`
+(``compile_census(graph, CensusConfig(...)).run(graph)``); ``triad_census``
+here is a deprecated thin shim over it.  This module keeps the algorithm
+building blocks the engine composes: the membership probe, the per-batch
+census kernel, dyad enumeration/padding, and the brute-force oracle.
+
 TPU-native reformulation of the paper's algorithm:
 
   * The per-dyad linked-list walks become **batched dense candidate tiles**:
@@ -216,16 +222,16 @@ def make_census_fn(g: CSRGraph, *, batch: int = 256, K: int | None = None,
 
 
 def triad_census(g: CSRGraph, *, batch: int = 256, K: int | None = None) -> CensusResult:
-    """End-to-end single-device census with host int64 accumulation."""
-    u, v = canonical_dyads(g)
-    u, v, valid = pad_dyads(u, v, batch)
-    fn = make_census_fn(g, batch=batch, K=K)
-    partials = fn(g.arrays, jnp.int32(g.n), jnp.asarray(u), jnp.asarray(v),
-                  jnp.asarray(valid))
-    counts = np.asarray(partials, dtype=np.int64).sum(0)
-    total = g.n * (g.n - 1) * (g.n - 2) // 6
-    counts[0] = total - int(counts.sum())
-    return CensusResult(counts=counts)
+    """End-to-end single-device census with host int64 accumulation.
+
+    .. deprecated:: use ``repro.engine.compile_census(g, config).run(g)`` —
+       this shim forwards to the engine's "xla" backend (and therefore gets
+       the plan cache and chunked streaming for free).
+    """
+    from ..engine import CensusConfig, compile_census
+
+    cfg = CensusConfig(backend="xla", batch=batch, k=K)
+    return compile_census(g, cfg).run(g)
 
 
 # ----------------------------------------------------------------------------

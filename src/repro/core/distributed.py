@@ -1,4 +1,8 @@
-"""Multi-pod distributed Triad Census via ``jax.shard_map``.
+"""Multi-pod distributed Triad Census via ``shard_map`` (see repro.compat).
+
+.. deprecated:: prefer ``repro.engine.compile_census`` with
+   ``CensusConfig(backend="distributed")`` — it adds the plan cache and
+   chunked streaming on top of the same shard_map schedule built here.
 
 Maps the paper's parallelization (one task queue per hardware thread,
 decoupled per-thread census arrays, single final merge) onto an SPMD mesh:
@@ -16,33 +20,35 @@ is why the census is compute-bound at any pod size (see EXPERIMENTS.md).
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from . import balance
-from .census import CensusResult, make_census_batch_fn
+from .. import compat
+from .census import make_census_batch_fn
 from .graph import CSRGraph
 
 
-def make_distributed_census_fn(g: CSRGraph, mesh: jax.sharding.Mesh, *,
-                               batch: int = 256, K: int | None = None,
-                               acc_dtype=jnp.int32):
+def make_census_fn_for_mesh(mesh: jax.sharding.Mesh, *, K: int,
+                            member_iters: int, batch: int = 256,
+                            acc_dtype=jnp.int32, on_trace=None):
     """Build a shard_map'd census over every device of ``mesh``.
 
-    The returned jitted fn takes ``(graph_arrays, n, tasks_u, tasks_v,
-    valid)`` with task arrays shaped ``(n_devices, L)`` (L a multiple of
-    ``batch``) and returns the merged ``(16,)`` connected/dyadic census.
+    The single definition of the SPMD schedule — both the legacy
+    ``make_distributed_census_fn`` and the engine's distributed backend
+    call this.  The returned jitted fn takes ``(graph_arrays, n, tasks_u,
+    tasks_v, valid)`` with task arrays shaped ``(n_devices, L)`` (L a
+    multiple of ``batch``) and returns the merged ``(16,)``
+    connected/dyadic census.  ``on_trace`` (if set) is invoked as a
+    trace-time side effect — the engine uses it to count retraces.
     """
-    K = K or max(1, g.max_deg)
-    member_iters = max(1, math.ceil(math.log2(max(g.max_deg, g.max_out_deg, 1) + 1))) + 1
     batch_fn = make_census_batch_fn(K, member_iters, acc_dtype)
     axes = tuple(mesh.axis_names)
 
     def device_census(arrays, n, u, v, valid):
+        if on_trace is not None:
+            on_trace()
         # u, v, valid: (1, L) local block — one task shard per device.
         u, v, valid = u[0], v[0], valid[0]
         steps = u.shape[0] // batch
@@ -51,7 +57,7 @@ def make_distributed_census_fn(g: CSRGraph, mesh: jax.sharding.Mesh, *,
             uu, vv, va = xs
             return carry + batch_fn(arrays, n, uu, vv, va), None
 
-        init = jax.lax.pvary(jnp.zeros((16,), acc_dtype), axes)
+        init = compat.pvary(jnp.zeros((16,), acc_dtype), axes)
         counts, _ = jax.lax.scan(
             step, init,
             (u.reshape(steps, batch), v.reshape(steps, batch),
@@ -62,13 +68,24 @@ def make_distributed_census_fn(g: CSRGraph, mesh: jax.sharding.Mesh, *,
             counts = jax.lax.psum(counts, ax)
         return counts
 
-    shmap = jax.shard_map(
+    shmap = compat.shard_map(
         device_census,
         mesh=mesh,
         in_specs=(P(), P(), P(axes), P(axes), P(axes)),
         out_specs=P(),
     )
     return jax.jit(shmap)
+
+
+def make_distributed_census_fn(g: CSRGraph, mesh: jax.sharding.Mesh, *,
+                               batch: int = 256, K: int | None = None,
+                               acc_dtype=jnp.int32):
+    """Legacy builder: derives K/member_iters from ``g`` (see
+    :func:`make_census_fn_for_mesh` for the schedule itself)."""
+    K = K or max(1, g.max_deg)
+    member_iters = max(1, math.ceil(math.log2(max(g.max_deg, g.max_out_deg, 1) + 1))) + 1
+    return make_census_fn_for_mesh(mesh, K=K, member_iters=member_iters,
+                                   batch=batch, acc_dtype=acc_dtype)
 
 
 def distributed_triad_census(
@@ -79,15 +96,20 @@ def distributed_triad_census(
     strategy: str = "sorted_snake",
     batch: int = 256,
     K: int | None = None,
-) -> tuple[CensusResult, balance.ShardedTasks]:
-    """Partition, balance, and run the census over all devices of ``mesh``."""
-    n_dev = math.prod(mesh.devices.shape)
-    tasks = balance.pack_tasks(g, n_dev, weight_model=weight_model,
-                               strategy=strategy, pad_multiple=batch)
-    fn = make_distributed_census_fn(g, mesh, batch=batch, K=K)
-    counts = fn(g.arrays, jnp.int32(g.n), jnp.asarray(tasks.u),
-                jnp.asarray(tasks.v), jnp.asarray(tasks.valid))
-    counts = np.asarray(counts, dtype=np.int64)
-    total = g.n * (g.n - 1) * (g.n - 2) // 6
-    counts[0] = total - int(counts.sum())
-    return CensusResult(counts=counts), tasks
+):
+    """Partition, balance, and run the census over all devices of ``mesh``.
+
+    .. deprecated:: thin shim over ``repro.engine`` (plan cache + chunked
+       streaming included).  Returns ``(CensusResult, task_stats)`` where
+       ``task_stats`` is the lightweight per-shard load summary (it has
+       ``.imbalance`` / ``.weights`` like the old ``ShardedTasks`` but not
+       the task arrays; call :func:`repro.core.balance.pack_tasks` if you
+       need those).
+    """
+    from ..engine import CensusConfig, compile_census
+
+    cfg = CensusConfig(backend="distributed", batch=batch, k=K,
+                       strategy=strategy, weight_model=weight_model)
+    plan = compile_census(g, cfg, mesh=mesh)
+    res = plan.run(g)
+    return res, plan.last_task_stats

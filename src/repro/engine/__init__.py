@@ -1,0 +1,29 @@
+"""One front door for the Triad Census: config -> plan -> result.
+
+    from repro.engine import CensusConfig, compile_census
+
+    plan = compile_census(graph, CensusConfig(backend="auto"))
+    result = plan.run(graph)          # CensusResult, int64 counts
+
+Backends (the paper's architecture comparison, one algorithm definition):
+
+    "xla"          — vectorized binary-search scan (single device)
+    "pallas"       — degree-bucketed VMEM tile kernel (TPU / interpret)
+    "distributed"  — shard_map SPMD over a device mesh
+    "auto"         — resolved from the visible hardware
+
+Plans are cached on bucketized graph metadata + config (see
+:mod:`repro.engine.plan`), and execution streams the dyad list in
+bounded-memory chunks.  The legacy entry points ``triad_census``,
+``triad_census_kernel`` and ``distributed_triad_census`` are deprecated
+shims over this module.
+"""
+from ..core.census import CensusResult
+from .config import BACKENDS, CensusConfig
+from .plan import (CensusPlan, GraphMeta, clear_plan_cache, compile_census,
+                   plan_cache_stats)
+
+__all__ = [
+    "BACKENDS", "CensusConfig", "CensusPlan", "CensusResult", "GraphMeta",
+    "clear_plan_cache", "compile_census", "plan_cache_stats",
+]

@@ -1,0 +1,208 @@
+"""Backend execution strategies for the census engine.
+
+Each backend exposes the same contract to :mod:`repro.engine.plan`:
+
+  * an optional ``make_*_chunk_fn`` building ONE compiled unit whose input
+    shapes depend only on (graph-metadata buckets, config) — never on the
+    actual dyad count — so a single trace serves every same-shape graph and
+    every streaming chunk, and
+  * a ``run_*`` loop that walks the canonical-dyad list in bounded-memory
+    chunks, feeding the compiled unit and accumulating int64 partials on the
+    host (the paper's decoupled census arrays + single final merge).
+
+The null-triad (type 003) closed form is applied once, in plan.py, after
+the chunk loop — backends only ever produce connected + dyadic counts.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import balance
+from ..core.census import canonical_dyads, make_census_batch_fn, pad_dyads
+from ..core.distributed import make_census_fn_for_mesh
+from ..core.graph import CSRGraph
+
+
+class TaskStats(NamedTuple):
+    """Lightweight per-shard load summary kept on the plan after a
+    distributed run (the full ShardedTasks arrays are NOT retained — plans
+    live forever in the cache and must not pin graph-sized host memory)."""
+
+    weights: np.ndarray  # (n_shards,) modeled per-shard work
+    strategy: str
+    weight_model: str
+    shape: tuple  # (n_shards, L) of the task arrays
+
+    @property
+    def imbalance(self) -> float:
+        mean = self.weights.mean()
+        return float(self.weights.max() / mean) if mean > 0 else 1.0
+
+# ----------------------------------------------------------------------------
+# xla: binary-search scan backend (single device)
+# ----------------------------------------------------------------------------
+
+
+def make_xla_chunk_fn(meta, config, stats: dict):
+    """Jitted ``(arrays, n, u, v, valid) -> (steps, 16)`` over one chunk.
+
+    ``u/v/valid`` always arrive padded to ``config.resolve_chunk()`` dyads,
+    so the trace is reused across chunks and across same-bucket graphs;
+    ``stats['traces']`` counts actual retraces (trace-time side effect).
+    """
+    batch = config.batch
+    batch_fn = make_census_batch_fn(meta.k, meta.member_iters,
+                                    config.acc_jnp_dtype)
+
+    @jax.jit
+    def chunk_fn(arrays, n, u, v, valid):
+        stats["traces"] += 1
+        steps = u.shape[0] // batch
+
+        def step(carry, xs):
+            uu, vv, va = xs
+            return carry, batch_fn(arrays, n, uu, vv, va)
+
+        _, partials = jax.lax.scan(
+            step, 0, (u.reshape(steps, batch), v.reshape(steps, batch),
+                      valid.reshape(steps, batch)))
+        return partials  # (steps, 16)
+
+    return chunk_fn
+
+
+def run_xla(plan, g: CSRGraph) -> np.ndarray:
+    u, v = canonical_dyads(g)
+    counts = np.zeros(16, dtype=np.int64)
+    if not len(u):
+        return counts
+    chunk = plan.chunk
+    arrays = plan.padded_arrays(g)
+    n = jnp.int32(g.n)
+    for s in range(0, len(u), chunk):
+        uu, vv, valid = pad_dyads(u[s:s + chunk], v[s:s + chunk], chunk)
+        partials = plan._fn(arrays, n, jnp.asarray(uu), jnp.asarray(vv),
+                            jnp.asarray(valid))
+        counts += np.asarray(partials, dtype=np.int64).sum(0)
+        plan.stats["chunks"] += 1
+    return counts
+
+
+# ----------------------------------------------------------------------------
+# distributed: shard_map SPMD backend
+# ----------------------------------------------------------------------------
+
+
+def make_distributed_chunk_fn(meta, config, mesh, stats: dict):
+    """Jitted shard_map'd ``(arrays, n, u, v, valid) -> (16,)`` per chunk.
+
+    Task arrays are ``(n_devices, chunk_L)``; each device scans its local
+    ``(1, chunk_L)`` slice and one psum per mesh axis performs the paper's
+    end-of-run merge (the only communication in the whole job).  The SPMD
+    schedule itself is :func:`repro.core.distributed.make_census_fn_for_mesh`.
+    """
+
+    def on_trace():
+        stats["traces"] += 1
+
+    return make_census_fn_for_mesh(
+        mesh, K=meta.k, member_iters=meta.member_iters, batch=config.batch,
+        acc_dtype=config.acc_jnp_dtype, on_trace=on_trace)
+
+
+def chunk_l(plan) -> int:
+    """Per-device streaming chunk length (multiple of ``batch``)."""
+    n_dev = math.prod(plan.mesh.devices.shape)
+    batch = plan.config.batch
+    per_dev = max(1, plan.chunk // n_dev)
+    return max(batch, ((per_dev + batch - 1) // batch) * batch)
+
+
+def run_distributed(plan, g: CSRGraph) -> np.ndarray:
+    cfg = plan.config
+    n_dev = math.prod(plan.mesh.devices.shape)
+    counts = np.zeros(16, dtype=np.int64)
+    tasks = balance.pack_tasks(g, n_dev, weight_model=cfg.weight_model,
+                               strategy=cfg.strategy, pad_multiple=cfg.batch)
+    plan.last_task_stats = TaskStats(weights=tasks.weights,
+                                     strategy=tasks.strategy,
+                                     weight_model=tasks.weight_model,
+                                     shape=tasks.u.shape)
+    if g.n_dyads == 0:
+        return counts
+    cl = chunk_l(plan)
+    L = tasks.u.shape[1]
+    pad = (-L) % cl
+    tu = np.pad(tasks.u, ((0, 0), (0, pad)))
+    tv = np.pad(tasks.v, ((0, 0), (0, pad)), constant_values=1)
+    tval = np.pad(tasks.valid, ((0, 0), (0, pad)))
+    arrays = plan.padded_arrays(g)
+    n = jnp.int32(g.n)
+    for s in range(0, L + pad, cl):
+        c = plan._fn(arrays, n, jnp.asarray(tu[:, s:s + cl]),
+                     jnp.asarray(tv[:, s:s + cl]),
+                     jnp.asarray(tval[:, s:s + cl]))
+        counts += np.asarray(c, dtype=np.int64)
+        plan.stats["chunks"] += 1
+    return counts
+
+
+# ----------------------------------------------------------------------------
+# pallas: degree-bucketed VMEM tile kernel backend
+# ----------------------------------------------------------------------------
+
+
+def run_pallas(plan, g: CSRGraph) -> np.ndarray:
+    from ..kernels import ops
+    from ..kernels.triad_census import SENTINEL, census_tiles_pallas
+
+    cfg = plan.config
+    interpret = cfg.resolve_interpret()
+    block = cfg.resolve_block()
+    u, v = canonical_dyads(g)
+    counts = np.zeros(16, dtype=np.int64)
+    if not len(u):
+        return counts
+    in_csr = ops.build_in_csr(g)  # transpose CSR, built once per run
+    deg = np.asarray(g.arrays.nbr_deg)
+    out_deg = np.diff(np.asarray(g.arrays.out_ptr))
+    need = np.maximum(np.maximum(deg[u], deg[v]),
+                      np.maximum(out_deg[u], out_deg[v]))
+    kmax = max(g.max_deg, 1)
+    ks = sorted({min(max(int(k), 1), kmax) for k in cfg.buckets} | {kmax})
+    chunk = max(block, (plan.chunk // block) * block)
+    assigned = np.zeros(len(u), bool)
+    for K in ks:
+        sel = (~assigned) & (need <= K)
+        assigned |= sel
+        if not sel.any():
+            continue
+        uu_all, vv_all = u[sel], v[sel]
+        # stream this bucket in bounded chunks: only (chunk, K) tiles are
+        # ever resident on host or device at once.
+        for s in range(0, len(uu_all), chunk):
+            uu = uu_all[s:s + chunk]
+            vv = vv_all[s:s + chunk]
+            pad = (-len(uu)) % block
+            if pad:
+                uu = np.concatenate([uu, np.full(pad, SENTINEL, np.int32)])
+                vv = np.concatenate([vv, np.full(pad, SENTINEL, np.int32)])
+            tiles = ops.build_tiles(g, np.clip(uu, 0, g.n - 1).astype(np.int64),
+                                    np.clip(vv, 0, g.n - 1).astype(np.int64),
+                                    K, in_csr=in_csr)
+            if pad:  # padded dyads: blank their tiles
+                for t in tiles.values():
+                    t[-pad:] = SENTINEL
+            part = census_tiles_pallas(
+                jnp.asarray(uu), jnp.asarray(vv), g.n,
+                *(jnp.asarray(tiles[k]) for k in
+                  ("out_u", "in_u", "out_v", "in_v", "nbr_u", "nbr_v")),
+                block=block, interpret=interpret)
+            counts += np.asarray(part, dtype=np.int64)
+            plan.stats["chunks"] += 1
+    return counts

@@ -1,0 +1,100 @@
+"""Census engine configuration (the single front door's knob surface).
+
+One frozen, hashable dataclass covers every knob the three historical entry
+points exposed separately (``triad_census``, ``triad_census_kernel``,
+``distributed_triad_census``) — backend choice, batch/tile geometry, load
+balancing, accumulator dtype, interpret mode, and the streaming chunk size.
+Hashability matters: the config is half of the plan-cache key.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BACKENDS = ("xla", "pallas", "distributed", "auto")
+
+_ACC_DTYPES = {"int32": jnp.int32, "int64": jnp.int64, "float32": jnp.float32}
+
+
+@dataclasses.dataclass(frozen=True)
+class CensusConfig:
+    """Static execution policy for a triad census.
+
+    Attributes:
+        backend: ``"xla"`` (binary-search scan), ``"pallas"`` (degree-bucketed
+            VMEM tile kernel), ``"distributed"`` (shard_map SPMD), or
+            ``"auto"`` (resolved from the visible hardware at compile time).
+        batch: dyads per scan step (xla/distributed backends).
+        block: pallas kernel block (dyads per grid step).  ``None`` picks
+            ``min(batch, 32)`` — the (block, K, K) membership-compare
+            intermediate makes large blocks expensive.
+        k: tile width override (candidate lanes per dyad).  ``None`` derives
+            a power-of-two bucket from the graph's max degree so same-shape
+            graphs share one compiled plan.
+        buckets: degree-bucket tile widths for the pallas backend (the
+            smallest bucket >= a dyad's degree need wins).
+        strategy / weight_model: task packing for the distributed backend
+            (see :mod:`repro.core.balance`).
+        acc_dtype: on-device partial-histogram dtype, as a string so the
+            config stays hashable ("int32" | "int64" | "float32").
+        interpret: pallas interpret mode; ``None`` = interpret off-TPU.
+        chunk_dyads: streaming chunk size — dyads materialized on device per
+            execution step.  ``None`` picks a bounded default.  The plan
+            caps the chunk at the graph's dyad-count bucket so small graphs
+            don't pad up to a full default chunk.  Every chunk has the same
+            padded shape, so one trace serves any graph whose metadata
+            buckets match (and graphs whose dyad tiles exceed device memory
+            still run).
+    """
+
+    backend: str = "auto"
+    batch: int = 256
+    block: Optional[int] = None
+    k: Optional[int] = None
+    buckets: Tuple[int, ...] = (32, 128, 512)
+    strategy: str = "sorted_snake"
+    weight_model: str = "canonical_uniform"
+    acc_dtype: str = "int32"
+    interpret: Optional[bool] = None
+    chunk_dyads: Optional[int] = None
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, "
+                             f"got {self.backend!r}")
+        if self.acc_dtype not in _ACC_DTYPES:
+            raise ValueError(f"acc_dtype must be one of {tuple(_ACC_DTYPES)}")
+        if self.batch < 1:
+            raise ValueError("batch must be >= 1")
+        if self.block is not None and self.block < 1:
+            raise ValueError("block must be >= 1")
+        if self.chunk_dyads is not None and self.chunk_dyads < 1:
+            raise ValueError("chunk_dyads must be >= 1")
+
+    @property
+    def acc_jnp_dtype(self):
+        return _ACC_DTYPES[self.acc_dtype]
+
+    def resolve_backend(self) -> str:
+        """Pin ``"auto"`` to a concrete backend for the current process."""
+        if self.backend != "auto":
+            return self.backend
+        if jax.default_backend() == "tpu":
+            return "pallas"
+        return "distributed" if len(jax.devices()) > 1 else "xla"
+
+    def resolve_chunk(self) -> int:
+        """Streaming chunk size, rounded up to a whole number of batches."""
+        c = self.chunk_dyads if self.chunk_dyads is not None else 8192
+        return max(self.batch, ((c + self.batch - 1) // self.batch) * self.batch)
+
+    def resolve_interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return jax.default_backend() != "tpu"
+
+    def resolve_block(self) -> int:
+        return self.block if self.block is not None else min(self.batch, 32)

@@ -1,0 +1,245 @@
+"""Compiled census plans + the plan cache (the serving hot path).
+
+``compile_census(graph_meta, config) -> CensusPlan`` is the single public
+entry point for the Triad Census.  A :class:`CensusPlan` owns everything the
+three historical paths each re-derived per call — canonical-dyad
+enumeration, padding, tile building, degree bucketing, task sharding, the
+scan/partial-histogram schedule, and the host-side int64 merge with the
+type-003 closed form — plus two things none of them had:
+
+  * a **plan cache** keyed on static graph metadata buckets (n, max-degree
+    and arc counts rounded to powers of two) + the config, so repeated
+    censuses on same-shape graphs reuse one compiled plan and hit zero
+    retraces, and
+  * **chunked streaming execution**: the compiled unit processes a
+    fixed-shape chunk of dyads, so its trace is independent of the dyad
+    count and graphs whose full dyad tiles exceed device memory still run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.census import CensusResult
+from ..core.graph import CSRGraph, GraphArrays
+from . import backends
+from .config import CensusConfig
+
+__all__ = ["GraphMeta", "CensusPlan", "compile_census", "clear_plan_cache",
+           "plan_cache_stats"]
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, int(x) - 1).bit_length() if x > 1 else 1
+
+
+def _c3(n: int) -> int:
+    return n * (n - 1) * (n - 2) // 6 if n >= 3 else 0
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphMeta:
+    """Static, bucketized graph shape — one half of the plan-cache key.
+
+    All fields are rounded up to powers of two so graphs of similar shape
+    map to the same plan (and therefore the same compiled trace).
+    """
+
+    n_bucket: int       # vertices, rounded up
+    k: int              # candidate tile width (>= max undirected degree)
+    member_iters: int   # binary-search trips covering any CSR row
+    m_out_bucket: int   # directed-arc array length, rounded up
+    m_nbr_bucket: int   # undirected-adjacency array length, rounded up
+
+    @classmethod
+    def from_graph(cls, g: CSRGraph, k: Optional[int] = None) -> "GraphMeta":
+        k_bucket = _next_pow2(max(g.max_deg, 1))
+        k_eff = int(k) if k else k_bucket
+        # membership searches run over REAL rows, so iteration count must
+        # cover the true max degree even under a (dryrun) K override.
+        depth = max(k_eff, k_bucket)
+        iters = max(1, math.ceil(math.log2(depth + 1))) + 1
+        return cls(
+            n_bucket=_next_pow2(max(g.n, 1)),
+            k=k_eff,
+            member_iters=iters,
+            m_out_bucket=_next_pow2(max(g.m, 1)),
+            m_nbr_bucket=_next_pow2(max(g.m_nbr, 1)),
+        )
+
+
+def _pad_to(a: np.ndarray, size: int, fill) -> np.ndarray:
+    out = np.full(size, fill, dtype=a.dtype)
+    out[: len(a)] = a
+    return out
+
+
+class CensusPlan:
+    """A compiled, reusable census execution plan.
+
+    Create via :func:`compile_census`; run with :meth:`run`.  One plan
+    serves every graph whose :class:`GraphMeta` matches — arrays are padded
+    to the metadata buckets before entering the device, so no input shape
+    (and hence no trace) depends on the concrete graph.
+    """
+
+    def __init__(self, meta: GraphMeta, config: CensusConfig, backend: str,
+                 mesh=None):
+        self.meta = meta
+        self.config = config
+        self.backend = backend
+        self.mesh = mesh
+        # streaming chunk, capped by the graph's dyad-count bucket
+        # (m_nbr_bucket/2 >= n_dyads) so small graphs don't pad to a full
+        # default chunk; both terms are static, so shapes stay cache-stable.
+        batch = config.batch
+        dyad_cap = -(-max(1, meta.m_nbr_bucket // 2) // batch) * batch
+        self.chunk = min(config.resolve_chunk(), dyad_cap)
+        self.stats = {"traces": 0, "runs": 0, "chunks": 0}
+        # distributed: per-shard load summary of the most recent run
+        # (a backends.TaskStats — plans are cached forever, so only the
+        # (n_shards,) weights are retained, never the task arrays).
+        self.last_task_stats = None
+        if backend == "xla":
+            self._fn = backends.make_xla_chunk_fn(meta, config, self.stats)
+        elif backend == "distributed":
+            if mesh is None:
+                raise ValueError("distributed backend needs a mesh")
+            self._fn = backends.make_distributed_chunk_fn(
+                meta, config, mesh, self.stats)
+        elif backend == "pallas":
+            self._fn = None  # pallas_call manages its own per-shape cache
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+
+    # -- graph admission -----------------------------------------------------
+
+    def _check(self, g: CSRGraph):
+        m = self.meta
+        if g.max_deg > m.k:
+            raise ValueError(
+                f"graph max_deg={g.max_deg} exceeds plan tile width k={m.k}; "
+                f"recompile with compile_census(graph, config)")
+        if g.n > m.n_bucket or g.m > m.m_out_bucket or g.m_nbr > m.m_nbr_bucket:
+            raise ValueError(
+                f"graph (n={g.n}, m={g.m}, m_nbr={g.m_nbr}) exceeds plan "
+                f"buckets {m}; recompile with compile_census(graph, config)")
+
+    def padded_arrays(self, g: CSRGraph) -> GraphArrays:
+        """Device arrays padded to the metadata buckets (shape-stable).
+
+        Padded ptr rows repeat the last offset (empty rows: binary search
+        sees lo == hi and never matches); padded idx/deg entries are inert.
+        """
+        m = self.meta
+        a = g.arrays
+        out_ptr = np.asarray(a.out_ptr)
+        nbr_ptr = np.asarray(a.nbr_ptr)
+        return GraphArrays(
+            out_ptr=jnp.asarray(_pad_to(out_ptr, m.n_bucket + 1, out_ptr[-1])),
+            out_idx=jnp.asarray(_pad_to(np.asarray(a.out_idx),
+                                        m.m_out_bucket, 0)),
+            nbr_ptr=jnp.asarray(_pad_to(nbr_ptr, m.n_bucket + 1, nbr_ptr[-1])),
+            nbr_idx=jnp.asarray(_pad_to(np.asarray(a.nbr_idx),
+                                        m.m_nbr_bucket, 0)),
+            nbr_deg=jnp.asarray(_pad_to(np.asarray(a.nbr_deg),
+                                        m.n_bucket, 0)),
+        )
+
+    # -- execution -----------------------------------------------------------
+
+    def run(self, g: CSRGraph) -> CensusResult:
+        """Execute the census; returns int64 counts for all 16 triad types."""
+        self._check(g)
+        self.stats["runs"] += 1
+        runner = {"xla": backends.run_xla,
+                  "distributed": backends.run_distributed,
+                  "pallas": backends.run_pallas}[self.backend]
+        counts = runner(self, g)
+        # the paper's line 29: null triads via the closed form, on host.
+        counts[0] = _c3(g.n) - int(counts.sum())
+        return CensusResult(counts=counts)
+
+    def aot_lower(self, g: CSRGraph):
+        """Lower the compiled chunk unit at this plan's static shapes.
+
+        For dry-run/roofline analysis (memory_analysis, cost_analysis)
+        without executing.  Only xla/distributed expose a jitted unit.
+        """
+        if self._fn is None:
+            raise NotImplementedError("pallas backend has no jitted unit")
+        m = self.meta
+        arrays = GraphArrays(
+            out_ptr=jax.ShapeDtypeStruct((m.n_bucket + 1,), jnp.int32),
+            out_idx=jax.ShapeDtypeStruct((m.m_out_bucket,), jnp.int32),
+            nbr_ptr=jax.ShapeDtypeStruct((m.n_bucket + 1,), jnp.int32),
+            nbr_idx=jax.ShapeDtypeStruct((m.m_nbr_bucket,), jnp.int32),
+            nbr_deg=jax.ShapeDtypeStruct((m.n_bucket,), jnp.int32),
+        )
+        n = jax.ShapeDtypeStruct((), jnp.int32)
+        if self.backend == "distributed":
+            n_dev = math.prod(self.mesh.devices.shape)
+            shape = (n_dev, backends.chunk_l(self))
+        else:
+            shape = (self.chunk,)
+        ints = jax.ShapeDtypeStruct(shape, jnp.int32)
+        bools = jax.ShapeDtypeStruct(shape, jnp.bool_)
+        return self._fn.lower(arrays, n, ints, ints, bools)
+
+
+# ----------------------------------------------------------------------------
+# plan cache
+# ----------------------------------------------------------------------------
+
+_PLAN_CACHE: dict = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+@functools.lru_cache(maxsize=8)
+def _default_mesh(n_dev: int):
+    return jax.make_mesh((n_dev,), ("data",))
+
+
+def compile_census(graph_meta, config: Optional[CensusConfig] = None, *,
+                   mesh=None) -> CensusPlan:
+    """Build (or fetch from cache) the census plan for this graph shape.
+
+    ``graph_meta`` is a :class:`CSRGraph` (metadata extracted and
+    bucketized) or an explicit :class:`GraphMeta`.  Plans are cached on
+    (metadata buckets, config, resolved backend, mesh): a second census on
+    a same-shape graph returns the identical plan object and re-uses its
+    compiled trace.
+    """
+    config = config or CensusConfig()
+    meta = (graph_meta if isinstance(graph_meta, GraphMeta)
+            else GraphMeta.from_graph(graph_meta, k=config.k))
+    backend = config.resolve_backend()
+    # normalize: an "auto" config and the explicit backend it resolves to
+    # must share one cache entry (and one compiled plan).
+    config = dataclasses.replace(config, backend=backend)
+    if backend == "distributed" and mesh is None:
+        mesh = _default_mesh(len(jax.devices()))
+    key = (meta, config, mesh)
+    plan = _PLAN_CACHE.get(key)
+    if plan is not None:
+        _CACHE_STATS["hits"] += 1
+        return plan
+    _CACHE_STATS["misses"] += 1
+    plan = CensusPlan(meta, config, backend, mesh)
+    _PLAN_CACHE[key] = plan
+    return plan
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+    _CACHE_STATS.update(hits=0, misses=0)
+
+
+def plan_cache_stats() -> dict:
+    return {**_CACHE_STATS, "size": len(_PLAN_CACHE)}

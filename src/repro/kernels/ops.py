@@ -5,16 +5,12 @@ bodies in interpret mode); on a TPU backend the real kernels run.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..core.census import canonical_dyads
 from ..core.graph import CSRGraph
 from .flash_attention import flash_attention_pallas
-from .triad_census import SENTINEL, census_tiles_pallas
+from .triad_census import SENTINEL
 
 
 def _default_interpret() -> bool:
@@ -45,13 +41,14 @@ def _pad_rows(ptr, idx, rows, K):
     return out
 
 
-def build_tiles(g: CSRGraph, u: np.ndarray, v: np.ndarray, K: int):
-    """All six (D, K) neighborhood tiles for a dyad batch."""
+def build_in_csr(g: CSRGraph) -> tuple[np.ndarray, np.ndarray]:
+    """Transpose CSR for the IsEdge(w, u) -> w in IN(u) reformulation.
+
+    Built once per graph and reused across streaming chunks (see
+    :mod:`repro.engine.backends`).
+    """
     out_ptr = np.asarray(g.arrays.out_ptr)
     out_idx = np.asarray(g.arrays.out_idx)
-    nbr_ptr = np.asarray(g.arrays.nbr_ptr)
-    nbr_idx = np.asarray(g.arrays.nbr_idx)
-    # in-CSR (transpose) for the IsEdge(w, u) -> w in IN(u) reformulation
     rows = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(out_ptr))
     # lexsort: primary key = in-row (out_idx), secondary = in-col (rows),
     # so the transposed CSR comes out row-sorted with sorted columns.
@@ -60,7 +57,17 @@ def build_tiles(g: CSRGraph, u: np.ndarray, v: np.ndarray, K: int):
     in_ptr = np.zeros(g.n + 1, np.int64)
     np.add.at(in_ptr, in_rows + 1, 1)
     in_ptr = np.cumsum(in_ptr)
-    in_idx = in_cols.astype(np.int32)
+    return in_ptr, in_cols.astype(np.int32)
+
+
+def build_tiles(g: CSRGraph, u: np.ndarray, v: np.ndarray, K: int,
+                in_csr: tuple[np.ndarray, np.ndarray] | None = None):
+    """All six (D, K) neighborhood tiles for a dyad batch."""
+    out_ptr = np.asarray(g.arrays.out_ptr)
+    out_idx = np.asarray(g.arrays.out_idx)
+    nbr_ptr = np.asarray(g.arrays.nbr_ptr)
+    nbr_idx = np.asarray(g.arrays.nbr_idx)
+    in_ptr, in_idx = in_csr if in_csr is not None else build_in_csr(g)
     return dict(
         out_u=_pad_rows(out_ptr, out_idx, u, K),
         in_u=_pad_rows(in_ptr, in_idx, u, K),
@@ -76,42 +83,12 @@ def triad_census_kernel(g: CSRGraph, *, block: int = 32,
                         interpret=None) -> np.ndarray:
     """Full 16-type census via the Pallas kernel, degree-bucketed.
 
-    Dyads are routed to the smallest tile width K >= max involved degree
-    (the beyond-paper padding-waste optimization); the final bucket uses
-    the graph's max degree.  Returns (16,) int64 counts.
+    .. deprecated:: use ``repro.engine.compile_census`` with
+       ``CensusConfig(backend="pallas")`` — this shim forwards there.
+       Returns (16,) int64 counts.
     """
-    interpret = _default_interpret() if interpret is None else interpret
-    u, v = canonical_dyads(g)
-    deg = np.asarray(g.arrays.nbr_deg)
-    out_deg = np.diff(np.asarray(g.arrays.out_ptr))
-    # a dyad's tile must hold nbr/out/in rows of u and v
-    need = np.maximum(deg[u], deg[v])
-    need = np.maximum(need, np.maximum(out_deg[u], out_deg[v]))
-    ks = sorted({min(max(int(k), 1), max(g.max_deg, 1)) for k in buckets}
-                | {max(g.max_deg, 1)})
-    counts = np.zeros(16, np.int64)
-    assigned = np.zeros(len(u), bool)
-    for K in ks:
-        sel = (~assigned) & (need <= K)
-        assigned |= sel
-        if not sel.any():
-            continue
-        uu, vv = u[sel], v[sel]
-        pad = (-len(uu)) % block
-        if pad:
-            uu = np.concatenate([uu, np.full(pad, SENTINEL, np.int32)])
-            vv = np.concatenate([vv, np.full(pad, SENTINEL, np.int32)])
-        tiles = build_tiles(g, np.clip(uu, 0, g.n - 1).astype(np.int64),
-                            np.clip(vv, 0, g.n - 1).astype(np.int64), K)
-        if pad:  # padded dyads: blank their tiles
-            for t in tiles.values():
-                t[-pad:] = SENTINEL
-        part = census_tiles_pallas(
-            jnp.asarray(uu), jnp.asarray(vv), g.n,
-            *(jnp.asarray(tiles[k]) for k in
-              ("out_u", "in_u", "out_v", "in_v", "nbr_u", "nbr_v")),
-            block=block, interpret=interpret)
-        counts += np.asarray(part, dtype=np.int64)
-    total = g.n * (g.n - 1) * (g.n - 2) // 6
-    counts[0] = total - counts.sum()
-    return counts
+    from ..engine import CensusConfig, compile_census
+
+    cfg = CensusConfig(backend="pallas", block=block, buckets=tuple(buckets),
+                       interpret=interpret)
+    return compile_census(g, cfg).run(g).counts

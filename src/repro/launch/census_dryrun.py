@@ -19,13 +19,12 @@ import math  # noqa: E402
 import sys  # noqa: E402
 import time  # noqa: E402
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from .. import core  # noqa: E402
 from ..core import balance, generators  # noqa: E402
-from ..core.census import make_census_batch_fn  # noqa: E402
+from ..engine import CensusConfig, compile_census  # noqa: E402
+from ..engine import backends as engine_backends  # noqa: E402
 from . import roofline  # noqa: E402
 from .mesh import make_production_mesh  # noqa: E402
 
@@ -57,18 +56,15 @@ def main():
     tasks = balance.pack_tasks(g, n_dev, weight_model=args.weights,
                                strategy=args.strategy,
                                pad_multiple=args.batch)
-    K = args.K or max(1, g.max_deg)
-    member_iters = max(1, math.ceil(math.log2(max(g.max_deg, 1) + 1))) + 1
-    fn = core.make_distributed_census_fn(g, mesh, batch=args.batch, K=K)
+    cfg = CensusConfig(backend="distributed", batch=args.batch,
+                       k=args.K or None, strategy=args.strategy,
+                       weight_model=args.weights)
+    plan = compile_census(g, cfg, mesh=mesh)
+    K = plan.meta.k
+    chunk_l = engine_backends.chunk_l(plan)
 
     with mesh:
-        lowered = jax.jit(fn).lower(
-            jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
-                         g.arrays),
-            jax.ShapeDtypeStruct((), jnp.int32),
-            *(jax.ShapeDtypeStruct(t.shape, jnp.int32 if t.dtype != bool
-                                   else jnp.bool_)
-              for t in (tasks.u, tasks.v, tasks.valid)))
+        lowered = plan.aot_lower(g)
         compiled = lowered.compile()
     ma = compiled.memory_analysis()
     print(ma)
@@ -84,11 +80,13 @@ def main():
     # census-specific useful-work model: valid candidate lanes / padded lanes
     deg = np.asarray(g.arrays.nbr_deg)
     useful_lanes = float((deg[u] + deg[v]).sum())
-    padded_lanes = float(tasks.u.shape[0] * tasks.u.shape[1] * 2 * K)
+    L_chunked = math.ceil(tasks.u.shape[1] / chunk_l) * chunk_l
+    padded_lanes = float(tasks.u.shape[0] * L_chunked * 2 * K)
     rec = {
         "dataset": args.dataset, "mesh": dict(mesh.shape), "tag": args.tag,
         "strategy": args.strategy, "weights": args.weights, "K": K,
-        "n_dyads": int(len(u)), "max_deg": int(g.max_deg),
+        "chunk_l": chunk_l, "n_dyads": int(len(u)),
+        "max_deg": int(g.max_deg),
         "imbalance": tasks.imbalance,
         "lane_utilization": useful_lanes / padded_lanes,
         "status": "ok",

@@ -270,6 +270,8 @@ def analyze(compiled, meta: dict) -> dict:
         ca = compiled.cost_analysis() or {}
     except Exception:
         pass
+    if isinstance(ca, (list, tuple)):  # jax<=0.4.x: one dict per program
+        ca = ca[0] if ca else {}
     walked = analyze_hlo(compiled.as_text())
     flops = walked["flops"]
     bytes_hbm = walked["bytes"]

@@ -1,6 +1,10 @@
 """Property-based tests (hypothesis) for the system's invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed; property tests skipped")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (brute_force_census, from_edges, pack_tasks,
                         triad_census)

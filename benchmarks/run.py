@@ -14,6 +14,7 @@ shaped like the paper's Table 4.1 datasets (scaled to CPU budgets; pass
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -202,6 +203,113 @@ def bench_engine_cache(scale: float):
           f"{t_cold / max(t_warm, 1e-9):.2f}x")
 
 
+def _census_cold(g, cfg):
+    """Compile + first run; returns (plan, cold wall seconds)."""
+    from repro.engine import compile_census
+
+    t0 = time.perf_counter()
+    plan = compile_census(g, cfg)
+    plan.run(g)
+    return plan, time.perf_counter() - t0
+
+
+def _census_warm(plan, g):
+    """One timed warm run + per-run chunk/sync stats."""
+    c0, s0 = plan.stats["chunks"], plan.stats["host_syncs"]
+    t0 = time.perf_counter()
+    plan.run(g)
+    dt = time.perf_counter() - t0
+    return dt, dict(chunks_per_run=plan.stats["chunks"] - c0,
+                    host_syncs_per_run=plan.stats["host_syncs"] - s0,
+                    traces=plan.stats["traces"])
+
+
+def bench_device_pipeline(scale: float, *, sync_baseline: bool = False,
+                          smoke: bool = False,
+                          out: str = "BENCH_census.json"):
+    """The device-resident streaming pipeline, tracked as machine-readable
+    JSON (``BENCH_census.json``) from this PR onward.
+
+    Per (graph, backend): cold/warm wall time, chunks and device→host sync
+    count per run (the one-transfer-per-run claim, measured), dyads/sec.
+    ``--sync-baseline`` additionally runs the synchronous PR-1 data path
+    (``device_accum=False``) on the same plans for an A/B speedup.
+    """
+    from repro.core import generators
+    from repro.engine import CensusConfig, clear_plan_cache
+
+    if smoke:
+        cases = [
+            ("rmat8", generators.rmat(8, edge_factor=4, seed=0),
+             ("xla", "distributed")),
+            ("rmat6", generators.rmat(6, edge_factor=4, seed=0),
+             ("pallas",)),
+        ]
+    else:
+        cases = [
+            # largest generated graph: sparse ER is the memory-bound regime
+            # (small K, many chunks) where the data path — not the census
+            # compute — is on the clock, i.e. the paper's actual bottleneck
+            ("er_sparse", generators.erdos_renyi(int(30000 * scale),
+                                                 int(60000 * scale), seed=0),
+             ("xla", "distributed", "pallas")),
+            # compute-bound power-law profile for contrast
+            ("slashdot", generators.paper_profile("slashdot",
+                                                  scale_down=64 / scale),
+             ("xla", "distributed")),
+            # pallas runs interpret-mode (python) off-TPU: smaller profile
+            ("eatSR", generators.paper_profile("eatSR",
+                                               scale_down=256 / scale),
+             ("pallas",)),
+        ]
+    # chunk well below the dyad counts so runs stream multiple chunks —
+    # the sync-count metric then shows O(chunks) transfers for the
+    # baseline vs O(1) for the device-resident path.
+    chunk = 256 if smoke else 2048
+    results = []
+    for name, g, backends in cases:
+        for backend in backends:
+            clear_plan_cache()
+            cfg = CensusConfig(backend=backend, batch=256,
+                               chunk_dyads=chunk)
+            reps = 2 if backend == "pallas" else 5
+            plan, cold = _census_cold(g, cfg)
+            syn_plan = None
+            if sync_baseline:
+                syn_plan, syn_cold = _census_cold(
+                    g, CensusConfig(backend=backend, batch=256,
+                                    chunk_dyads=chunk, device_accum=False))
+            # interleave warm reps of both paths so machine drift hits
+            # them equally; report min-of-reps.
+            warm = syn_warm = float("inf")
+            for _ in range(reps):
+                dt, dev = _census_warm(plan, g)
+                warm = min(warm, dt)
+                if syn_plan is not None:
+                    dt, syn = _census_warm(syn_plan, g)
+                    syn_warm = min(syn_warm, dt)
+            row = dict(graph=name, backend=backend, n=g.n, m=g.m,
+                       dyads=g.n_dyads, device_path=plan.device_path,
+                       dyads_per_sec=g.n_dyads / max(warm, 1e-9),
+                       cold_s=cold, warm_s=warm, **dev)
+            if syn_plan is not None:
+                row["sync_baseline"] = dict(cold_s=syn_cold, warm_s=syn_warm,
+                                            **syn)
+                row["speedup_vs_sync"] = syn_warm / max(warm, 1e-9)
+            results.append(row)
+            extra = (f",speedup_vs_sync={row['speedup_vs_sync']:.2f}x"
+                     if sync_baseline else "")
+            print(f"census_pipeline_{name}_{backend},"
+                  f"{row['warm_s'] * 1e6:.0f},syncs_per_run="
+                  f"{row['host_syncs_per_run']}"
+                  f",chunks={row['chunks_per_run']}{extra}")
+    payload = dict(schema=1, smoke=smoke,
+                   jax_backend=jax.default_backend(), results=results)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {out}")
+
+
 def bench_lm_smoke(scale: float):
     """Framework-side: smoke-scale train-step latency per arch."""
     from repro.config import RunConfig, get_config, list_configs
@@ -228,7 +336,24 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=1.0,
                     help="graph size multiplier (1.0 = CPU-sized)")
     ap.add_argument("--only", default="")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI pass: device-pipeline bench on tiny "
+                         "graphs, writes BENCH_census.json")
+    ap.add_argument("--sync-baseline", action="store_true",
+                    help="also time the synchronous (device_accum=False) "
+                         "data path for an A/B speedup in the JSON")
+    ap.add_argument("--out", default="BENCH_census.json",
+                    help="device-pipeline JSON output path")
     args = ap.parse_args()
+
+    def device_pipeline(scale):
+        bench_device_pipeline(scale, sync_baseline=args.sync_baseline,
+                              smoke=args.smoke, out=args.out)
+
+    print("name,us_per_call,derived")
+    if args.smoke:
+        device_pipeline(args.scale)
+        return
     benches = {
         "census_versions": bench_census_versions,
         "balance": bench_balance,
@@ -236,10 +361,10 @@ def main() -> None:
         "scaling": bench_scaling,
         "kernel": bench_kernel,
         "engine_cache": bench_engine_cache,
+        "device_pipeline": device_pipeline,
         "lm_smoke": bench_lm_smoke,
     }
     only = [s for s in args.only.split(",") if s]
-    print("name,us_per_call,derived")
     for name, fn in benches.items():
         if only and name not in only:
             continue

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import functools
 import math
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -190,6 +191,67 @@ def canonical_dyads(g: CSRGraph) -> tuple[np.ndarray, np.ndarray]:
     return rows[keep], cols[keep]
 
 
+@functools.partial(jax.jit, static_argnames=("out_size",))
+def enumerate_dyads_device(nbr_ptr: jax.Array, nbr_idx: jax.Array,
+                           m_nbr: jax.Array, *, out_size: int):
+    """Device-side :func:`canonical_dyads`: jitted, fixed-shape.
+
+    Inputs are the bucket-padded undirected CSR (see
+    ``CensusPlan.padded_arrays``) plus the true entry count ``m_nbr``
+    (traced, so same-bucket graphs share one trace).  Returns ``(u, v)``
+    int32 arrays of static length ``out_size`` holding the canonical dyads
+    in CSR row-major order — identical order to the host enumeration —
+    padded past ``m_nbr // 2`` with the inert ``(0, 1)`` dyad.
+
+    The CSR row of every entry is recovered with one vectorized
+    ``searchsorted`` over the ptr array, and the ``col > row`` filter is
+    compacted by gathering rank ``r``'s source position out of the running
+    keep-count (a second searchsorted — all gathers, no XLA:CPU scatter,
+    no data-dependent shape, no host round trip).
+    """
+    M = nbr_idx.shape[0]
+    pos = jnp.arange(M, dtype=jnp.int32)
+    rows = (jnp.searchsorted(nbr_ptr, pos, side="right") - 1).astype(jnp.int32)
+    keep = (pos < m_nbr) & (nbr_idx > rows)
+    csum = jnp.cumsum(keep, dtype=jnp.int32)
+    rank = jnp.arange(out_size, dtype=jnp.int32)
+    src = jnp.clip(jnp.searchsorted(csum, rank + 1, side="left"), 0, M - 1)
+    live = rank < (m_nbr // 2)
+    return (jnp.where(live, rows[src], 0),
+            jnp.where(live, nbr_idx[src], 1))
+
+
+@functools.partial(jax.jit, static_argnames=("ks",))
+def sort_dyads_by_bucket(nbr_deg: jax.Array, out_ptr: jax.Array,
+                         u: jax.Array, v: jax.Array, n_dyads: jax.Array, *,
+                         ks: tuple):
+    """Device-side degree-bucket assignment + load-balancing sort.
+
+    For each dyad the tile-width *need* is ``max(deg(u), deg(v),
+    out_deg(u), out_deg(v))``; its bucket is the smallest ``ks[i] >= need``.
+    Dyads are stable-sorted by (bucket, need) — two chained stable argsorts,
+    which avoids composing a single wide sort key that could overflow int32
+    — so tile rows inside a chunk are degree-ordered: gathers hit
+    neighboring CSR segments (coalescing) and blocks have uniform work
+    (load balance).  Padding dyads sort past every real bucket.
+
+    Returns ``(u_sorted, v_sorted, bucket_counts)`` with ``bucket_counts``
+    of static length ``len(ks)`` — the only value the host needs to drive
+    the per-bucket chunk loop (one scalar-array transfer per run).
+    """
+    out_deg = out_ptr[1:] - out_ptr[:-1]
+    need = jnp.maximum(jnp.maximum(nbr_deg[u], nbr_deg[v]),
+                       jnp.maximum(out_deg[u], out_deg[v]))
+    ks_arr = jnp.asarray(ks, dtype=jnp.int32)
+    b = jnp.sum(need[:, None] > ks_arr[None, :], axis=1).astype(jnp.int32)
+    live = jnp.arange(u.shape[0], dtype=jnp.int32) < n_dyads
+    b = jnp.where(live, b, len(ks))
+    by_need = jnp.argsort(need)
+    order = by_need[jnp.argsort(b[by_need])]  # stable: bucket, then need
+    counts = jnp.zeros(len(ks) + 1, jnp.int32).at[b].add(1)
+    return u[order], v[order], counts[: len(ks)]
+
+
 def make_census_fn(g: CSRGraph, *, batch: int = 256, K: int | None = None,
                    acc_dtype=jnp.int32):
     """Build a jitted census function for graphs with this one's metadata.
@@ -230,6 +292,10 @@ def triad_census(g: CSRGraph, *, batch: int = 256, K: int | None = None) -> Cens
     """
     from ..engine import CensusConfig, compile_census
 
+    warnings.warn(
+        "repro.core.triad_census is deprecated; use "
+        "repro.engine.compile_census(graph, CensusConfig(...)).run(graph)",
+        DeprecationWarning, stacklevel=2)
     cfg = CensusConfig(backend="xla", batch=batch, k=K)
     return compile_census(g, cfg).run(g)
 

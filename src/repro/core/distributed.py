@@ -20,6 +20,7 @@ is why the census is compute-bound at any pod size (see EXPERIMENTS.md).
 from __future__ import annotations
 
 import math
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -108,6 +109,10 @@ def distributed_triad_census(
     """
     from ..engine import CensusConfig, compile_census
 
+    warnings.warn(
+        "repro.core.distributed.distributed_triad_census is deprecated; use "
+        "repro.engine.compile_census with CensusConfig(backend='distributed')",
+        DeprecationWarning, stacklevel=2)
     cfg = CensusConfig(backend="distributed", batch=batch, k=K,
                        strategy=strategy, weight_model=weight_model)
     plan = compile_census(g, cfg, mesh=mesh)

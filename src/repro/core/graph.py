@@ -25,13 +25,22 @@ import numpy as np
 
 
 class GraphArrays(NamedTuple):
-    """Device-resident graph (a JAX pytree; all int32)."""
+    """Device-resident graph (a JAX pytree; all int32).
+
+    ``in_ptr``/``in_idx`` hold the transpose (in-arc) CSR used by the Pallas
+    tile-gather path.  They default to ``None`` (an empty pytree subtree):
+    only plans that need them pay for the device-side transpose build — see
+    :func:`repro.kernels.ops.build_in_csr_device` and
+    ``CensusPlan.padded_arrays``.
+    """
 
     out_ptr: jax.Array  # (n+1,)
     out_idx: jax.Array  # (m,) sorted within each row
     nbr_ptr: jax.Array  # (n+1,)
     nbr_idx: jax.Array  # (m_nbr,) sorted within each row
     nbr_deg: jax.Array  # (n,) undirected open-neighborhood sizes
+    in_ptr: jax.Array | None = None  # (n+1,) transpose CSR (device-built)
+    in_idx: jax.Array | None = None  # (m,)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -12,18 +12,22 @@ Backends (the paper's architecture comparison, one algorithm definition):
     "distributed"  — shard_map SPMD over a device mesh
     "auto"         — resolved from the visible hardware
 
-Plans are cached on bucketized graph metadata + config (see
-:mod:`repro.engine.plan`), and execution streams the dyad list in
-bounded-memory chunks.  The legacy entry points ``triad_census``,
-``triad_census_kernel`` and ``distributed_triad_census`` are deprecated
-shims over this module.
+Plans are cached in a bounded LRU keyed on bucketized graph metadata +
+config (see :mod:`repro.engine.plan`), and execution streams the dyad
+list in bounded-memory chunks through a device-resident pipeline:
+on-device dyad enumeration, async double-buffered chunk dispatch, and an
+on-device cross-chunk accumulator with one device→host transfer per run
+(see :mod:`repro.engine.backends`).  The legacy entry points
+``triad_census``, ``triad_census_kernel`` and
+``distributed_triad_census`` are deprecated shims over this module.
 """
 from ..core.census import CensusResult
 from .config import BACKENDS, CensusConfig
 from .plan import (CensusPlan, GraphMeta, clear_plan_cache, compile_census,
-                   plan_cache_stats)
+                   plan_cache_stats, set_plan_cache_capacity)
 
 __all__ = [
     "BACKENDS", "CensusConfig", "CensusPlan", "CensusResult", "GraphMeta",
     "clear_plan_cache", "compile_census", "plan_cache_stats",
+    "set_plan_cache_capacity",
 ]

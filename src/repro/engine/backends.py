@@ -2,19 +2,36 @@
 
 Each backend exposes the same contract to :mod:`repro.engine.plan`:
 
-  * an optional ``make_*_chunk_fn`` building ONE compiled unit whose input
-    shapes depend only on (graph-metadata buckets, config) — never on the
-    actual dyad count — so a single trace serves every same-shape graph and
-    every streaming chunk, and
-  * a ``run_*`` loop that walks the canonical-dyad list in bounded-memory
-    chunks, feeding the compiled unit and accumulating int64 partials on the
-    host (the paper's decoupled census arrays + single final merge).
+  * a ``make_*`` builder producing ONE compiled unit whose input shapes
+    depend only on (graph-metadata buckets, config) — never on the actual
+    dyad count — so a single trace serves every same-shape graph and every
+    streaming chunk, and
+  * a ``run_*`` driver that walks the canonical-dyad list in bounded-memory
+    chunks.
+
+Two data paths exist per backend (``CensusConfig.device_accum``):
+
+  * **device-resident (default)** — dyads are enumerated / bucketed / chunk
+    -sliced on device, chunk ``k + pipeline_depth`` is dispatched while
+    chunk ``k`` still computes (async double buffering), and the 16-bin
+    partial counts accumulate **on device** across chunks as an int32
+    hi/lo pair (no x64 requirement).  Exactly one device→host transfer
+    happens per run — the paper's single end-of-run merge.
+  * **synchronous baseline** — the PR-1 path: host numpy dyad slicing,
+    per-chunk upload, and a blocking per-chunk device→host transfer with
+    host int64 accumulation.  Kept runnable for A/B benchmarking
+    (``benchmarks/run.py --sync-baseline``).
+
+``plan.stats["host_syncs"]`` counts blocking device→host transfers so the
+O(chunks) → O(1) claim is measurable, not asserted.
 
 The null-triad (type 003) closed form is applied once, in plan.py, after
 the chunk loop — backends only ever produce connected + dyadic counts.
 """
 from __future__ import annotations
 
+import collections
+import functools
 import math
 from typing import NamedTuple
 
@@ -23,9 +40,44 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import balance
-from ..core.census import canonical_dyads, make_census_batch_fn, pad_dyads
+from ..core.census import (canonical_dyads, enumerate_dyads_device,
+                           make_census_batch_fn, pad_dyads,
+                           sort_dyads_by_bucket)
 from ..core.distributed import make_census_fn_for_mesh
 from ..core.graph import CSRGraph
+
+# the device accumulator is an int32 (hi, lo) pair: count = hi * 2**30 + lo
+# with 0 <= lo < 2**30 — exact for totals up to 2**61 without enabling x64.
+# Per-fold deltas must stay below 2**30, which holds whenever
+# batch * n < 2**30 (the same order of invariant the int32 scan partials
+# already required).
+_ACC_SHIFT = 30
+
+
+def _acc_update(hi, lo, delta):
+    """Fold a non-negative int32 partial into the hi/lo accumulator."""
+    lo = lo + delta.astype(jnp.int32)
+    carry = lo >> _ACC_SHIFT
+    return hi + carry, lo - (carry << _ACC_SHIFT)
+
+
+def _acc_fetch(plan, hi, lo) -> np.ndarray:
+    """THE device→host transfer of a device-resident run (counted)."""
+    plan.stats["host_syncs"] += 1
+    packed = np.asarray(jnp.stack([hi, lo]), dtype=np.int64)
+    return (packed[0] << _ACC_SHIFT) + packed[1]
+
+
+def _throttle(window: collections.deque, ref, depth: int) -> None:
+    """Double-buffering backpressure: allow ``depth`` chunks in flight.
+
+    Blocks on the dispatch ``depth`` chunks back (a wait, not a transfer)
+    so the device work queue stays bounded while chunk ``k + depth`` is
+    being enqueued as chunk ``k`` computes.
+    """
+    window.append(ref)
+    if len(window) > max(1, depth):
+        window.popleft().block_until_ready()
 
 
 class TaskStats(NamedTuple):
@@ -51,9 +103,10 @@ class TaskStats(NamedTuple):
 def make_xla_chunk_fn(meta, config, stats: dict):
     """Jitted ``(arrays, n, u, v, valid) -> (steps, 16)`` over one chunk.
 
-    ``u/v/valid`` always arrive padded to ``config.resolve_chunk()`` dyads,
-    so the trace is reused across chunks and across same-bucket graphs;
-    ``stats['traces']`` counts actual retraces (trace-time side effect).
+    The synchronous-baseline unit: ``u/v/valid`` arrive padded to
+    ``config.resolve_chunk()`` dyads, so the trace is reused across chunks
+    and across same-bucket graphs; ``stats['traces']`` counts actual
+    retraces (trace-time side effect).
     """
     batch = config.batch
     batch_fn = make_census_batch_fn(meta.k, meta.member_iters,
@@ -76,7 +129,44 @@ def make_xla_chunk_fn(meta, config, stats: dict):
     return chunk_fn
 
 
-def run_xla(plan, g: CSRGraph) -> np.ndarray:
+def make_xla_stream_fn(meta, config, stats: dict, chunk: int):
+    """Device-resident unit: slice + census + accumulate, one dispatch.
+
+    ``(arrays, n, dyads_u, dyads_v, n_dyads, start, hi, lo) -> (hi, lo)``.
+    The full (bucket-padded) dyad list stays on device; the chunk at
+    ``start`` is carved out with ``dynamic_slice`` and its partial counts
+    fold into the carried hi/lo accumulator per scan step — the host only
+    ever dispatches.
+    """
+    batch = config.batch
+    batch_fn = make_census_batch_fn(meta.k, meta.member_iters,
+                                    config.acc_jnp_dtype)
+
+    @jax.jit
+    def stream_fn(arrays, n, du, dv, n_dyads, start, hi, lo):
+        stats["traces"] += 1
+        u = jax.lax.dynamic_slice(du, (start,), (chunk,))
+        v = jax.lax.dynamic_slice(dv, (start,), (chunk,))
+        valid = (start + jnp.arange(chunk, dtype=jnp.int32)) < n_dyads
+        u = jnp.where(valid, u, 0)
+        v = jnp.where(valid, v, 1)  # keep the u < v padding invariant
+        steps = chunk // batch
+
+        def step(carry, xs):
+            uu, vv, va = xs
+            h, l = carry
+            return _acc_update(h, l, batch_fn(arrays, n, uu, vv, va)), None
+
+        (hi, lo), _ = jax.lax.scan(
+            step, (hi, lo),
+            (u.reshape(steps, batch), v.reshape(steps, batch),
+             valid.reshape(steps, batch)))
+        return hi, lo
+
+    return stream_fn
+
+
+def _run_xla_sync(plan, g: CSRGraph) -> np.ndarray:
     u, v = canonical_dyads(g)
     counts = np.zeros(16, dtype=np.int64)
     if not len(u):
@@ -90,7 +180,30 @@ def run_xla(plan, g: CSRGraph) -> np.ndarray:
                             jnp.asarray(valid))
         counts += np.asarray(partials, dtype=np.int64).sum(0)
         plan.stats["chunks"] += 1
+        plan.stats["host_syncs"] += 1
     return counts
+
+
+def run_xla(plan, g: CSRGraph) -> np.ndarray:
+    if not plan.device_path:
+        return _run_xla_sync(plan, g)
+    if g.n_dyads == 0:
+        return np.zeros(16, dtype=np.int64)
+    arrays = plan.padded_arrays(g)
+    du, dv = enumerate_dyads_device(arrays.nbr_ptr, arrays.nbr_idx,
+                                    jnp.int32(g.m_nbr),
+                                    out_size=plan.dyad_pad)
+    n = jnp.int32(g.n)
+    n_dyads = jnp.int32(g.n_dyads)
+    hi = lo = jnp.zeros(16, jnp.int32)
+    window: collections.deque = collections.deque()
+    n_chunks = -(-g.n_dyads // plan.chunk)
+    for k in range(n_chunks):
+        hi, lo = plan._fn(arrays, n, du, dv, n_dyads,
+                          jnp.int32(k * plan.chunk), hi, lo)
+        plan.stats["chunks"] += 1
+        _throttle(window, hi, plan.config.pipeline_depth)
+    return _acc_fetch(plan, hi, lo)
 
 
 # ----------------------------------------------------------------------------
@@ -113,6 +226,23 @@ def make_distributed_chunk_fn(meta, config, mesh, stats: dict):
     return make_census_fn_for_mesh(
         mesh, K=meta.k, member_iters=meta.member_iters, batch=config.batch,
         acc_dtype=config.acc_jnp_dtype, on_trace=on_trace)
+
+
+def make_distributed_stream_fn(meta, config, mesh, stats: dict):
+    """Device-resident unit: shard_map census + on-device hi/lo fold.
+
+    ``(arrays, n, u, v, valid, hi, lo) -> (hi, lo)`` where ``u/v/valid``
+    are ``(n_devices, chunk_L)`` slabs carved from the device-resident task
+    arrays by the driver (an eager device-side ``dynamic_slice`` — no host
+    staging).  The psum'd per-chunk counts never leave the device.
+    """
+    inner = make_distributed_chunk_fn(meta, config, mesh, stats)
+
+    @jax.jit
+    def stream_fn(arrays, n, u, v, valid, hi, lo):
+        return _acc_update(hi, lo, inner(arrays, n, u, v, valid))
+
+    return stream_fn
 
 
 def chunk_l(plan) -> int:
@@ -143,13 +273,28 @@ def run_distributed(plan, g: CSRGraph) -> np.ndarray:
     tval = np.pad(tasks.valid, ((0, 0), (0, pad)))
     arrays = plan.padded_arrays(g)
     n = jnp.int32(g.n)
+    if not plan.device_path:
+        for s in range(0, L + pad, cl):
+            c = plan._fn(arrays, n, jnp.asarray(tu[:, s:s + cl]),
+                         jnp.asarray(tv[:, s:s + cl]),
+                         jnp.asarray(tval[:, s:s + cl]))
+            counts += np.asarray(c, dtype=np.int64)
+            plan.stats["chunks"] += 1
+            plan.stats["host_syncs"] += 1
+        return counts
+    # device path: ONE upload of the packed task arrays, then device-side
+    # slab slicing + on-device accumulation; one transfer at the end.
+    dtu, dtv, dtval = jnp.asarray(tu), jnp.asarray(tv), jnp.asarray(tval)
+    hi = lo = jnp.zeros(16, jnp.int32)
+    window: collections.deque = collections.deque()
     for s in range(0, L + pad, cl):
-        c = plan._fn(arrays, n, jnp.asarray(tu[:, s:s + cl]),
-                     jnp.asarray(tv[:, s:s + cl]),
-                     jnp.asarray(tval[:, s:s + cl]))
-        counts += np.asarray(c, dtype=np.int64)
+        su = jax.lax.dynamic_slice(dtu, (0, s), (n_dev, cl))
+        sv = jax.lax.dynamic_slice(dtv, (0, s), (n_dev, cl))
+        sva = jax.lax.dynamic_slice(dtval, (0, s), (n_dev, cl))
+        hi, lo = plan._fn(arrays, n, su, sv, sva, hi, lo)
         plan.stats["chunks"] += 1
-    return counts
+        _throttle(window, hi, plan.config.pipeline_depth)
+    return _acc_fetch(plan, hi, lo)
 
 
 # ----------------------------------------------------------------------------
@@ -157,7 +302,35 @@ def run_distributed(plan, g: CSRGraph) -> np.ndarray:
 # ----------------------------------------------------------------------------
 
 
-def run_pallas(plan, g: CSRGraph) -> np.ndarray:
+@functools.partial(jax.jit,
+                   static_argnames=("K", "chunk", "block", "interpret"))
+def _pallas_chunk(arrays, n, su, sv, start, end, hi, lo, *, K: int,
+                  chunk: int, block: int, interpret: bool):
+    """Fused device chunk: slice sorted dyads -> gather tiles -> kernel ->
+    fold into the hi/lo accumulator.  One dispatch, zero host staging."""
+    from ..kernels import ops
+    from ..kernels.triad_census import SENTINEL, census_tiles_pallas
+
+    pos = start + jnp.arange(chunk, dtype=jnp.int32)
+    valid = pos < end
+    u = jnp.take(su, pos, mode="clip")
+    v = jnp.take(sv, pos, mode="clip")
+    tiles = ops.gather_tiles_device(arrays, u, v, valid, K=K)
+    parts = census_tiles_pallas(
+        jnp.where(valid, u, SENTINEL), jnp.where(valid, v, SENTINEL), n,
+        *(tiles[k] for k in ("out_u", "in_u", "out_v", "in_v",
+                             "nbr_u", "nbr_v")),
+        block=block, interpret=interpret, reduce=False)
+
+    def fold(carry, p):
+        h, l = carry
+        return _acc_update(h, l, p), None
+
+    (hi, lo), _ = jax.lax.scan(fold, (hi, lo), parts)
+    return hi, lo
+
+
+def _run_pallas_sync(plan, g: CSRGraph) -> np.ndarray:
     from ..kernels import ops
     from ..kernels.triad_census import SENTINEL, census_tiles_pallas
 
@@ -205,4 +378,47 @@ def run_pallas(plan, g: CSRGraph) -> np.ndarray:
                 block=block, interpret=interpret)
             counts += np.asarray(part, dtype=np.int64)
             plan.stats["chunks"] += 1
+            plan.stats["host_syncs"] += 1
     return counts
+
+
+def run_pallas(plan, g: CSRGraph) -> np.ndarray:
+    if not plan.device_path:
+        return _run_pallas_sync(plan, g)
+    cfg = plan.config
+    if g.n_dyads == 0:
+        return np.zeros(16, dtype=np.int64)
+    interpret = cfg.resolve_interpret()
+    block = cfg.resolve_block()
+    chunk = max(block, (plan.chunk // block) * block)
+    # top bucket = the plan's bucketized tile width (NOT the exact max
+    # degree): every static shape below is then a pure function of the
+    # plan-cache key, so same-bucket graphs reuse the compiled pipeline.
+    kmax = max(plan.meta.k, 1)
+    ks = tuple(sorted({min(max(int(k), 1), kmax)
+                       for k in cfg.buckets} | {kmax}))
+    arrays = plan.padded_arrays(g)  # includes the device-built in-CSR
+    du, dv = enumerate_dyads_device(arrays.nbr_ptr, arrays.nbr_idx,
+                                    jnp.int32(g.m_nbr),
+                                    out_size=plan.dyad_pad)
+    su, sv, counts_dev = sort_dyads_by_bucket(
+        arrays.nbr_deg, arrays.out_ptr, du, dv, jnp.int32(g.n_dyads), ks=ks)
+    # the one small control transfer: per-bucket dyad counts drive the host
+    # chunk schedule (O(1) per run, independent of chunk count).
+    bucket_counts = np.asarray(counts_dev)
+    plan.stats["host_syncs"] += 1
+    n = jnp.int32(g.n)
+    hi = lo = jnp.zeros(16, jnp.int32)
+    window: collections.deque = collections.deque()
+    offset = 0
+    for i, K in enumerate(ks):
+        c = int(bucket_counts[i])
+        end = jnp.int32(offset + c)
+        for s in range(offset, offset + c, chunk):
+            hi, lo = _pallas_chunk(arrays, n, su, sv, jnp.int32(s), end,
+                                   hi, lo, K=K, chunk=chunk, block=block,
+                                   interpret=interpret)
+            plan.stats["chunks"] += 1
+            _throttle(window, hi, plan.config.pipeline_depth)
+        offset += c
+    return _acc_fetch(plan, hi, lo)

@@ -48,6 +48,22 @@ class CensusConfig:
             padded shape, so one trace serves any graph whose metadata
             buckets match (and graphs whose dyad tiles exceed device memory
             still run).
+        device_accum: ``True`` (the default via ``None``) runs the
+            device-resident pipeline: dyads are enumerated, bucketed and
+            chunk-sliced on device, partial counts accumulate **on device**
+            across chunks as an int32 hi/lo pair (no x64 requirement), and
+            exactly one device→host transfer happens per run — the paper's
+            single end-of-run merge.  ``False`` restores the synchronous
+            baseline: host-side dyad enumeration, per-chunk upload, and a
+            blocking per-chunk device→host transfer with host int64
+            accumulation (kept runnable for benchmark comparison via
+            ``benchmarks/run.py --sync-baseline``).
+        pipeline_depth: max in-flight chunks in the device-resident path
+            (double-buffering depth).  The dispatcher enqueues chunk
+            ``k + depth`` while chunk ``k`` still computes, then applies
+            backpressure (a non-transferring block) so device queue memory
+            stays bounded.  ``1`` degenerates to lockstep dispatch; ``2``
+            (default) is classic double buffering.
     """
 
     backend: str = "auto"
@@ -60,6 +76,8 @@ class CensusConfig:
     acc_dtype: str = "int32"
     interpret: Optional[bool] = None
     chunk_dyads: Optional[int] = None
+    device_accum: Optional[bool] = None
+    pipeline_depth: int = 2
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -73,6 +91,8 @@ class CensusConfig:
             raise ValueError("block must be >= 1")
         if self.chunk_dyads is not None and self.chunk_dyads < 1:
             raise ValueError("chunk_dyads must be >= 1")
+        if self.pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
 
     @property
     def acc_jnp_dtype(self):
@@ -90,6 +110,10 @@ class CensusConfig:
         """Streaming chunk size, rounded up to a whole number of batches."""
         c = self.chunk_dyads if self.chunk_dyads is not None else 8192
         return max(self.batch, ((c + self.batch - 1) // self.batch) * self.batch)
+
+    def resolve_device_accum(self) -> bool:
+        """Device-resident pipeline on/off; ``None`` means on."""
+        return True if self.device_accum is None else self.device_accum
 
     def resolve_interpret(self) -> bool:
         if self.interpret is not None:

@@ -10,13 +10,14 @@ type-003 closed form — plus two things none of them had:
   * a **plan cache** keyed on static graph metadata buckets (n, max-degree
     and arc counts rounded to powers of two) + the config, so repeated
     censuses on same-shape graphs reuse one compiled plan and hit zero
-    retraces, and
+    retraces (bounded LRU — see :func:`set_plan_cache_capacity`), and
   * **chunked streaming execution**: the compiled unit processes a
     fixed-shape chunk of dyads, so its trace is independent of the dyad
     count and graphs whose full dyad tiles exceed device memory still run.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import math
@@ -32,7 +33,7 @@ from . import backends
 from .config import CensusConfig
 
 __all__ = ["GraphMeta", "CensusPlan", "compile_census", "clear_plan_cache",
-           "plan_cache_stats"]
+           "plan_cache_stats", "set_plan_cache_capacity"]
 
 
 def _next_pow2(x: int) -> int:
@@ -101,18 +102,29 @@ class CensusPlan:
         batch = config.batch
         dyad_cap = -(-max(1, meta.m_nbr_bucket // 2) // batch) * batch
         self.chunk = min(config.resolve_chunk(), dyad_cap)
-        self.stats = {"traces": 0, "runs": 0, "chunks": 0}
+        # device-resident dyad list length: the dyad-count bucket rounded up
+        # to whole chunks, so every chunk's dynamic_slice stays in bounds
+        # (and the shape stays a pure function of the metadata buckets).
+        d_bucket = max(1, meta.m_nbr_bucket // 2)
+        self.dyad_pad = max(self.chunk, -(-d_bucket // self.chunk) * self.chunk)
+        self.device_path = config.resolve_device_accum()
+        self.stats = {"traces": 0, "runs": 0, "chunks": 0, "host_syncs": 0}
         # distributed: per-shard load summary of the most recent run
-        # (a backends.TaskStats — plans are cached forever, so only the
-        # (n_shards,) weights are retained, never the task arrays).
+        # (a backends.TaskStats — plans are cached with a bounded LRU, so
+        # only the (n_shards,) weights are retained, never the task arrays).
         self.last_task_stats = None
         if backend == "xla":
-            self._fn = backends.make_xla_chunk_fn(meta, config, self.stats)
+            self._fn = (
+                backends.make_xla_stream_fn(meta, config, self.stats,
+                                            self.chunk)
+                if self.device_path
+                else backends.make_xla_chunk_fn(meta, config, self.stats))
         elif backend == "distributed":
             if mesh is None:
                 raise ValueError("distributed backend needs a mesh")
-            self._fn = backends.make_distributed_chunk_fn(
-                meta, config, mesh, self.stats)
+            make = (backends.make_distributed_stream_fn if self.device_path
+                    else backends.make_distributed_chunk_fn)
+            self._fn = make(meta, config, mesh, self.stats)
         elif backend == "pallas":
             self._fn = None  # pallas_call manages its own per-shape cache
         else:
@@ -131,17 +143,24 @@ class CensusPlan:
                 f"graph (n={g.n}, m={g.m}, m_nbr={g.m_nbr}) exceeds plan "
                 f"buckets {m}; recompile with compile_census(graph, config)")
 
-    def padded_arrays(self, g: CSRGraph) -> GraphArrays:
+    def padded_arrays(self, g: CSRGraph, *,
+                      with_in_csr: Optional[bool] = None) -> GraphArrays:
         """Device arrays padded to the metadata buckets (shape-stable).
 
         Padded ptr rows repeat the last offset (empty rows: binary search
         sees lo == hi and never matches); padded idx/deg entries are inert.
+
+        ``with_in_csr`` additionally populates the transpose (in-arc) CSR
+        fields, built **on device** by
+        :func:`repro.kernels.ops.build_in_csr_device` — once per run, no
+        host round trip.  Default: only for the device-resident pallas
+        path, the one consumer of in-arc tiles.
         """
         m = self.meta
         a = g.arrays
         out_ptr = np.asarray(a.out_ptr)
         nbr_ptr = np.asarray(a.nbr_ptr)
-        return GraphArrays(
+        arrays = GraphArrays(
             out_ptr=jnp.asarray(_pad_to(out_ptr, m.n_bucket + 1, out_ptr[-1])),
             out_idx=jnp.asarray(_pad_to(np.asarray(a.out_idx),
                                         m.m_out_bucket, 0)),
@@ -151,6 +170,14 @@ class CensusPlan:
             nbr_deg=jnp.asarray(_pad_to(np.asarray(a.nbr_deg),
                                         m.n_bucket, 0)),
         )
+        if with_in_csr is None:
+            with_in_csr = self.backend == "pallas" and self.device_path
+        if with_in_csr:
+            from ..kernels import ops
+            in_ptr, in_idx = ops.build_in_csr_device(arrays.out_ptr,
+                                                     arrays.out_idx)
+            arrays = arrays._replace(in_ptr=in_ptr, in_idx=in_idx)
+        return arrays
 
     # -- execution -----------------------------------------------------------
 
@@ -190,15 +217,46 @@ class CensusPlan:
             shape = (self.chunk,)
         ints = jax.ShapeDtypeStruct(shape, jnp.int32)
         bools = jax.ShapeDtypeStruct(shape, jnp.bool_)
-        return self._fn.lower(arrays, n, ints, ints, bools)
+        if not self.device_path:
+            return self._fn.lower(arrays, n, ints, ints, bools)
+        scalar = jax.ShapeDtypeStruct((), jnp.int32)
+        acc = jax.ShapeDtypeStruct((16,), jnp.int32)
+        if self.backend == "distributed":
+            return self._fn.lower(arrays, n, ints, ints, bools, acc, acc)
+        dyads = jax.ShapeDtypeStruct((self.dyad_pad,), jnp.int32)
+        return self._fn.lower(arrays, n, dyads, dyads, scalar, scalar,
+                              acc, acc)
 
 
 # ----------------------------------------------------------------------------
-# plan cache
+# plan cache (bounded LRU)
 # ----------------------------------------------------------------------------
 
-_PLAN_CACHE: dict = {}
-_CACHE_STATS = {"hits": 0, "misses": 0}
+_PLAN_CACHE: collections.OrderedDict = collections.OrderedDict()
+_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+_DEFAULT_CAPACITY = 32
+_CACHE_CAPACITY = _DEFAULT_CAPACITY
+
+
+def set_plan_cache_capacity(capacity: int) -> None:
+    """Bound the plan cache to ``capacity`` entries (LRU eviction).
+
+    Long-lived multi-graph services would otherwise accumulate one
+    compiled plan (and its XLA executable) per distinct metadata bucket
+    forever.  Shrinking the capacity evicts the least-recently-used plans
+    immediately; evictions are counted in :func:`plan_cache_stats`.
+    """
+    global _CACHE_CAPACITY
+    if capacity < 1:
+        raise ValueError("plan cache capacity must be >= 1")
+    _CACHE_CAPACITY = capacity
+    _evict_to_capacity()
+
+
+def _evict_to_capacity() -> None:
+    while len(_PLAN_CACHE) > _CACHE_CAPACITY:
+        _PLAN_CACHE.popitem(last=False)
+        _CACHE_STATS["evictions"] += 1
 
 
 @functools.lru_cache(maxsize=8)
@@ -221,25 +279,31 @@ def compile_census(graph_meta, config: Optional[CensusConfig] = None, *,
             else GraphMeta.from_graph(graph_meta, k=config.k))
     backend = config.resolve_backend()
     # normalize: an "auto" config and the explicit backend it resolves to
-    # must share one cache entry (and one compiled plan).
-    config = dataclasses.replace(config, backend=backend)
+    # must share one cache entry (and one compiled plan); likewise
+    # device_accum=None and the True it resolves to.
+    config = dataclasses.replace(
+        config, backend=backend,
+        device_accum=config.resolve_device_accum())
     if backend == "distributed" and mesh is None:
         mesh = _default_mesh(len(jax.devices()))
     key = (meta, config, mesh)
     plan = _PLAN_CACHE.get(key)
     if plan is not None:
         _CACHE_STATS["hits"] += 1
+        _PLAN_CACHE.move_to_end(key)  # LRU freshness
         return plan
     _CACHE_STATS["misses"] += 1
     plan = CensusPlan(meta, config, backend, mesh)
     _PLAN_CACHE[key] = plan
+    _evict_to_capacity()
     return plan
 
 
 def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
-    _CACHE_STATS.update(hits=0, misses=0)
+    _CACHE_STATS.update(hits=0, misses=0, evictions=0)
 
 
 def plan_cache_stats() -> dict:
-    return {**_CACHE_STATS, "size": len(_PLAN_CACHE)}
+    return {**_CACHE_STATS, "size": len(_PLAN_CACHE),
+            "capacity": _CACHE_CAPACITY}

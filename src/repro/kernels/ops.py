@@ -5,7 +5,11 @@ bodies in interpret mode); on a TPU backend the real kernels run.
 """
 from __future__ import annotations
 
+import functools
+import warnings
+
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..core.graph import CSRGraph
@@ -60,6 +64,65 @@ def build_in_csr(g: CSRGraph) -> tuple[np.ndarray, np.ndarray]:
     return in_ptr, in_cols.astype(np.int32)
 
 
+@jax.jit
+def build_in_csr_device(out_ptr: jax.Array, out_idx: jax.Array):
+    """Device-side :func:`build_in_csr`: transpose CSR from padded arrays.
+
+    ``out_ptr``/``out_idx`` are the bucket-padded directed CSR
+    (``CensusPlan.padded_arrays``); the true arc count is ``out_ptr[-1]``
+    because padded ptr rows repeat the last offset.  Returns
+    ``(in_ptr, in_idx)`` with the same padded shapes — padded ``in_idx``
+    tail entries are inert (no real row's ptr range reaches them).  Built
+    once per run, on device; no host round trip.
+    """
+    M = out_idx.shape[0]
+    n = out_ptr.shape[0] - 1
+    pos = jnp.arange(M, dtype=jnp.int32)
+    rows = (jnp.searchsorted(out_ptr, pos, side="right") - 1).astype(jnp.int32)
+    m = out_ptr[-1]
+    # padding entries get sort key n (past every real row) so they land at
+    # the array tail and outside every in_ptr range.
+    cols_key = jnp.where(pos < m, out_idx, n)
+    order = jnp.argsort(cols_key)  # stable: within-row cols stay sorted
+    in_idx = rows[order]
+    counts = jnp.zeros(n + 1, jnp.int32).at[cols_key].add(1)[:n]
+    in_ptr = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(counts).astype(jnp.int32)])
+    return in_ptr, in_idx
+
+
+def _gather_rows(ptr, idx, rows, row_valid, K: int):
+    """(B, K) SENTINEL-padded tile of CSR rows — the device ``_pad_rows``."""
+    r = jnp.where(row_valid, rows, 0)
+    start = ptr[r]
+    deg = ptr[r + 1] - start
+    j = jnp.arange(K, dtype=jnp.int32)
+    pos = jnp.clip(start[:, None] + j[None, :], 0, idx.shape[0] - 1)
+    w = idx[pos]
+    live = row_valid[:, None] & (j[None, :] < deg[:, None])
+    return jnp.where(live, w, SENTINEL)
+
+
+@functools.partial(jax.jit, static_argnames=("K",))
+def gather_tiles_device(arrays, u: jax.Array, v: jax.Array,
+                        valid: jax.Array, *, K: int):
+    """Device-side :func:`build_tiles`: all six (B, K) tiles in one trace.
+
+    ``arrays`` is a :class:`repro.core.graph.GraphArrays` whose
+    ``in_ptr``/``in_idx`` transpose CSR is populated (see
+    :func:`build_in_csr_device`).  Rows with ``valid == False`` come back
+    all-SENTINEL, matching the host path's blanked padding tiles.
+    """
+    return dict(
+        out_u=_gather_rows(arrays.out_ptr, arrays.out_idx, u, valid, K),
+        in_u=_gather_rows(arrays.in_ptr, arrays.in_idx, u, valid, K),
+        out_v=_gather_rows(arrays.out_ptr, arrays.out_idx, v, valid, K),
+        in_v=_gather_rows(arrays.in_ptr, arrays.in_idx, v, valid, K),
+        nbr_u=_gather_rows(arrays.nbr_ptr, arrays.nbr_idx, u, valid, K),
+        nbr_v=_gather_rows(arrays.nbr_ptr, arrays.nbr_idx, v, valid, K),
+    )
+
+
 def build_tiles(g: CSRGraph, u: np.ndarray, v: np.ndarray, K: int,
                 in_csr: tuple[np.ndarray, np.ndarray] | None = None):
     """All six (D, K) neighborhood tiles for a dyad batch."""
@@ -89,6 +152,10 @@ def triad_census_kernel(g: CSRGraph, *, block: int = 32,
     """
     from ..engine import CensusConfig, compile_census
 
+    warnings.warn(
+        "repro.kernels.ops.triad_census_kernel is deprecated; use "
+        "repro.engine.compile_census with CensusConfig(backend='pallas')",
+        DeprecationWarning, stacklevel=2)
     cfg = CensusConfig(backend="pallas", block=block, buckets=tuple(buckets),
                        interpret=interpret)
     return compile_census(g, cfg).run(g).counts

@@ -95,11 +95,17 @@ def _census_kernel(u_ref, v_ref, n_ref, out_u_ref, in_u_ref, out_v_ref,
 
 
 def census_tiles_pallas(u, v, n, out_u, in_u, out_v, in_v, nbr_u, nbr_v,
-                        *, block: int = 32, interpret: bool = True):
+                        *, block: int = 32, interpret: bool = True,
+                        reduce: bool = True):
     """Run the census kernel over (D, K) tiles; returns (16,) partial counts.
 
     ``interpret=True`` executes the kernel body in Python on CPU (this
-    container); on a real TPU pass ``interpret=False``.
+    container); on a real TPU pass ``interpret=False``.  ``n`` may be a
+    traced scalar (the engine's device-resident path calls this under jit).
+    With ``reduce=False`` the raw per-grid-step ``(grid, 16)`` int32
+    partials are returned so the caller can fold them into a wider
+    accumulator (the engine's hi/lo pair) instead of risking an int32
+    overflow in the grid-sum.
     """
     D, K = nbr_u.shape
     assert D % block == 0, (D, block)
@@ -120,7 +126,9 @@ def census_tiles_pallas(u, v, n, out_u, in_u, out_v, in_v, nbr_u, nbr_v,
         out_specs=pl.BlockSpec((1, 16), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((grid[0], 16), jnp.int32),
         interpret=interpret,
-    )(u[:, None], v[:, None], jnp.asarray([n], jnp.int32), out_u, in_u,
-      out_v, in_v, nbr_u, nbr_v, jnp.asarray(table16))
+    )(u[:, None], v[:, None], jnp.asarray(n, jnp.int32).reshape(1), out_u,
+      in_u, out_v, in_v, nbr_u, nbr_v, jnp.asarray(table16))
+    if not reduce:
+        return partials  # (grid, 16)
     # decoupled-accumulator merge (paper: per-thread-block census arrays)
     return partials.sum(0)

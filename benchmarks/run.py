@@ -270,6 +270,10 @@ def bench_device_pipeline(scale: float, *, sync_baseline: bool = False,
     for name, g, backends in cases:
         for backend in backends:
             clear_plan_cache()
+            # also drop module-level jit caches (enumerate/sort/_pallas_
+            # chunk survive clear_plan_cache): later same-shape cases
+            # would otherwise report understated cold_s in the JSON.
+            jax.clear_caches()
             cfg = CensusConfig(backend=backend, batch=256,
                                chunk_dyads=chunk)
             reps = 2 if backend == "pallas" else 5
@@ -303,10 +307,114 @@ def bench_device_pipeline(scale: float, *, sync_baseline: bool = False,
                   f"{row['warm_s'] * 1e6:.0f},syncs_per_run="
                   f"{row['host_syncs_per_run']}"
                   f",chunks={row['chunks_per_run']}{extra}")
-    payload = dict(schema=1, smoke=smoke,
-                   jax_backend=jax.default_backend(), results=results)
+    _merge_json(out, schema=1, smoke=smoke,
+                jax_backend=jax.default_backend(), results=results)
+    print(f"# wrote {out}")
+
+
+def _merge_json(out: str, **sections) -> None:
+    """Update ``out`` in place, preserving sections other benches wrote
+    (the pipeline bench must not drop 'serve' and vice versa)."""
+    try:
+        with open(out) as f:
+            payload = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        payload = {}
+    payload.update(sections)
     with open(out, "w") as f:
         json.dump(payload, f, indent=1)
+
+
+def _same_bucket_fleet(make, n_want: int, k=None):
+    """Generate graphs until ``n_want`` share one GraphMeta bucket."""
+    from repro.engine import GraphMeta
+
+    groups: dict = {}
+    for seed in range(4 * n_want):
+        g = make(seed)
+        groups.setdefault(GraphMeta.from_graph(g, k=k), []).append(g)
+        best = max(groups.values(), key=len)
+        if len(best) >= n_want:
+            return best[:n_want]
+    return max(groups.values(), key=len)
+
+
+def bench_serve(scale: float, *, smoke: bool = False,
+                out: str = "BENCH_census.json"):
+    """``--serve``: fleet requests/sec, batched service vs sequential runs.
+
+    The serving claim the tentpole makes, measured: a fleet of small
+    same-bucket graphs (the common SNA request pattern — per-ego or
+    per-community subgraphs, not one giant graph) through
+    ``CensusService`` (one vmapped dispatch schedule + one transfer per
+    batch) vs one ``plan.run`` per request on the same warm plan.  Also
+    runs a mixed rmat/erdos_renyi fleet spanning several buckets.
+    Batching pays where per-request dispatch overhead rivals the census
+    compute — i.e. small graphs; on large graphs the vmapped unit
+    degenerates to the same device work and the speedup fades to ~1x.
+    Results merge into ``BENCH_census.json`` under ``"serve"``.
+    """
+    from repro.core import generators
+    from repro.engine import CensusConfig, clear_plan_cache, compile_census
+    from repro.serve import CensusService, ServiceConfig
+
+    cfg = CensusConfig(backend="xla", batch=64, chunk_dyads=64)
+    if smoke:
+        same = _same_bucket_fleet(
+            lambda s: generators.rmat(5, edge_factor=2, seed=s), 16, k=cfg.k)
+        mixed = same[:8] + [generators.erdos_renyi(48, 96, seed=s)
+                            for s in range(8)]
+    else:
+        same = _same_bucket_fleet(
+            lambda s: generators.rmat(6, edge_factor=2, seed=s), 64, k=cfg.k)
+        mixed = same[:32] + [generators.erdos_renyi(128, 256, seed=s)
+                             for s in range(32)]
+    max_batch = 8
+
+    def sequential(fleet):
+        for g in fleet:
+            compile_census(g, cfg).run(g)
+
+    def batched(fleet):
+        svc = CensusService(ServiceConfig(max_batch=max_batch,
+                                          max_wait_requests=len(fleet),
+                                          census=cfg))
+        svc.run_fleet(fleet)
+        return svc
+
+    rows = []
+    for name, fleet in (("same_bucket", same), ("mixed", mixed)):
+        clear_plan_cache()
+        # warm both paths: compiles (incl. the vmapped batch widths the
+        # timed runs will use) land outside the timed region.
+        sequential(fleet)
+        svc = batched(fleet)
+        # min-of-reps, interleaved: this container is noisy-neighbor
+        # territory, and a single slow rep on either side would turn the
+        # requests/sec ratio into machine-load measurement.
+        t_seq = t_bat = float("inf")
+        for _ in range(6 if smoke else 4):
+            t0 = time.perf_counter()
+            sequential(fleet)
+            t_seq = min(t_seq, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            svc = batched(fleet)
+            t_bat = min(t_bat, time.perf_counter() - t0)
+        st = svc.stats()
+        row = dict(fleet=name, n_requests=len(fleet),
+                   buckets=len(st["buckets"]), max_batch=max_batch,
+                   mean_batch=st["mean_batch"],
+                   sequential_rps=len(fleet) / max(t_seq, 1e-9),
+                   batched_rps=len(fleet) / max(t_bat, 1e-9))
+        row["speedup"] = row["batched_rps"] / max(row["sequential_rps"], 1e-9)
+        rows.append(row)
+        print(f"census_serve_{name},{t_bat / len(fleet) * 1e6:.0f},"
+              f"batched_rps={row['batched_rps']:.0f}"
+              f",sequential_rps={row['sequential_rps']:.0f}"
+              f",speedup={row['speedup']:.2f}x"
+              f",mean_batch={row['mean_batch']:.1f}")
+    _merge_json(out, schema=1, jax_backend=jax.default_backend(),
+                serve=dict(smoke=smoke, results=rows))
     print(f"# wrote {out}")
 
 
@@ -339,6 +447,10 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI pass: device-pipeline bench on tiny "
                          "graphs, writes BENCH_census.json")
+    ap.add_argument("--serve", action="store_true",
+                    help="fleet serving bench: batched CensusService vs "
+                         "sequential plan.run requests/sec (merges a "
+                         "'serve' section into the JSON)")
     ap.add_argument("--sync-baseline", action="store_true",
                     help="also time the synchronous (device_accum=False) "
                          "data path for an A/B speedup in the JSON")
@@ -351,6 +463,9 @@ def main() -> None:
                               smoke=args.smoke, out=args.out)
 
     print("name,us_per_call,derived")
+    if args.serve:
+        bench_serve(args.scale, smoke=args.smoke, out=args.out)
+        return
     if args.smoke:
         device_pipeline(args.scale)
         return
@@ -362,6 +477,7 @@ def main() -> None:
         "kernel": bench_kernel,
         "engine_cache": bench_engine_cache,
         "device_pipeline": device_pipeline,
+        "serve": lambda s: bench_serve(s, smoke=False, out=args.out),
         "lm_smoke": bench_lm_smoke,
     }
     only = [s for s in args.only.split(",") if s]

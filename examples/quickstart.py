@@ -23,8 +23,9 @@ def census_demo():
     # a same-shape graph reuses the compiled plan (the serving hot path)
     g2 = generators.rmat(10, edge_factor=8, seed=1)
     res2 = compile_census(g2, CensusConfig(backend="auto")).run(g2)
-    print(f"second same-shape census: total={res2.total:,}; "
-          f"plan cache: {plan_cache_stats()}")
+    cache = plan_cache_stats()
+    print(f"second same-shape census: total={res2.total:,}; plan cache: "
+          f"{ {k: cache[k] for k in ('hits', 'misses', 'size')} }")
     for name, c in zip(TRIAD_NAMES, res.counts):
         if c:
             print(f"  {name:5s} {c:>14,}")

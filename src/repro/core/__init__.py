@@ -9,7 +9,8 @@ from .census import (CensusResult, brute_force_census, canonical_dyads,
                      make_census_fn, triad_census)
 from .balance import ShardedTasks, dyad_weights, exact_s_sizes, pack_tasks
 from .distributed import distributed_triad_census, make_distributed_census_fn
-from .graph import CSRGraph, GraphArrays, from_edges, load_pajek_or_edgelist
+from .graph import (CSRGraph, GraphArrays, from_edges,
+                    load_pajek_or_edgelist, stack_graph_arrays)
 from .triad_table import TRIAD_NAMES, TRIAD_TABLE_64
 
 _ENGINE_EXPORTS = ("CensusConfig", "CensusPlan", "GraphMeta",
@@ -20,7 +21,7 @@ __all__ = [
     "TRIAD_TABLE_64", "brute_force_census", "canonical_dyads",
     "distributed_triad_census", "dyad_weights", "exact_s_sizes", "from_edges",
     "load_pajek_or_edgelist", "make_census_fn", "make_distributed_census_fn",
-    "pack_tasks", "triad_census", *_ENGINE_EXPORTS,
+    "pack_tasks", "stack_graph_arrays", "triad_census", *_ENGINE_EXPORTS,
 ]
 
 

@@ -45,6 +45,11 @@ from .triad_table import TRIAD_TABLE_64
 
 
 class CensusResult(NamedTuple):
+    """A finished triad census: ``counts[i]`` is the number of triads of
+    type ``i + 1`` in MAN notation ("003" .. "300", see
+    :data:`repro.core.triad_table.TRIAD_NAMES`), int64, including the
+    type-003 closed form.  ``total`` always equals C(n, 3)."""
+
     counts: np.ndarray  # (16,) int64 — types 1..16 ("003".."300")
 
     @property

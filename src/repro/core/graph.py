@@ -24,6 +24,12 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (minimum 1) — the metadata bucket and
+    batch-width rounding rule shared by plan keys and the batched path."""
+    return 1 << max(0, int(x) - 1).bit_length() if x > 1 else 1
+
+
 class GraphArrays(NamedTuple):
     """Device-resident graph (a JAX pytree; all int32).
 
@@ -121,6 +127,29 @@ def from_edges(n: int, src, dst, *, directed: bool = True) -> CSRGraph:
     )
 
 
+def stack_graph_arrays(arrays: "list[GraphArrays]") -> GraphArrays:
+    """Stack per-graph :class:`GraphArrays` into one batched pytree.
+
+    Every field gains a leading batch axis ``B = len(arrays)``; the inputs
+    must already share identical (bucket-padded) shapes — i.e. come from
+    one plan's ``padded_arrays``/``padded_arrays_host`` — which is exactly
+    the same-bucket admission rule ``CensusPlan.run_batch`` enforces.
+    Optional fields (the transpose CSR) stay ``None`` unless present on
+    every member.  Host (numpy) members are stacked on host and shipped
+    as ONE device put per field — the cheap path for fleet batching;
+    device members are stacked with ``jnp.stack``.
+    """
+    def stk(field):
+        vals = [getattr(a, field) for a in arrays]
+        if any(v is None for v in vals):
+            return None
+        if all(isinstance(v, np.ndarray) for v in vals):
+            return jnp.asarray(np.stack(vals))
+        return jnp.stack(vals)
+
+    return GraphArrays(**{f: stk(f) for f in GraphArrays._fields})
+
+
 def dense_adjacency(g: CSRGraph) -> np.ndarray:
     """(n, n) boolean adjacency — for small-graph oracles only."""
     a = np.zeros((g.n, g.n), dtype=bool)
@@ -153,6 +182,7 @@ def load_pajek_or_edgelist(path: str) -> CSRGraph:
             if low.startswith("*vertices"):
                 n = int(line.split()[1])
                 pajek = True
+                mode = "vertices"  # skip vertex-label lines until *arcs/*edges
                 continue
             if low.startswith("*arcs"):
                 mode = "arcs"
@@ -163,7 +193,7 @@ def load_pajek_or_edgelist(path: str) -> CSRGraph:
             if line.startswith("*"):
                 mode = "skip"
                 continue
-            if mode == "skip":
+            if mode in ("skip", "vertices"):
                 continue
             parts = line.split()
             if len(parts) < 2:

@@ -17,9 +17,14 @@ config (see :mod:`repro.engine.plan`), and execution streams the dyad
 list in bounded-memory chunks through a device-resident pipeline:
 on-device dyad enumeration, async double-buffered chunk dispatch, and an
 on-device cross-chunk accumulator with one device→host transfer per run
-(see :mod:`repro.engine.backends`).  The legacy entry points
-``triad_census``, ``triad_census_kernel`` and
+(see :mod:`repro.engine.backends`).  ``CensusPlan.run_batch`` executes B
+same-bucket graphs as one vmapped batch (``plan.run`` is the B = 1
+case); :class:`repro.serve.CensusService` builds fleet serving on top.
+The legacy entry points ``triad_census``, ``triad_census_kernel`` and
 ``distributed_triad_census`` are deprecated shims over this module.
+
+Architecture walk-through: ``docs/ARCHITECTURE.md``; paper-concept index:
+``docs/PAPER_MAPPING.md``.
 """
 from ..core.census import CensusResult
 from .config import BACKENDS, CensusConfig

@@ -15,8 +15,10 @@ Two data paths exist per backend (``CensusConfig.device_accum``):
     -sliced on device, chunk ``k + pipeline_depth`` is dispatched while
     chunk ``k`` still computes (async double buffering), and the 16-bin
     partial counts accumulate **on device** across chunks as an int32
-    hi/lo pair (no x64 requirement).  Exactly one device→host transfer
-    happens per run — the paper's single end-of-run merge.
+    hi/lo pair (no x64 requirement).  One device→host transfer completes
+    the run — the paper's single end-of-run merge.  (The pallas backend
+    adds one small control fetch per run for its bucket schedule, so its
+    counted syncs are 2, still O(1) in the chunk count.)
   * **synchronous baseline** — the PR-1 path: host numpy dyad slicing,
     per-chunk upload, and a blocking per-chunk device→host transfer with
     host int64 accumulation.  Kept runnable for A/B benchmarking
@@ -44,7 +46,7 @@ from ..core.census import (canonical_dyads, enumerate_dyads_device,
                            make_census_batch_fn, pad_dyads,
                            sort_dyads_by_bucket)
 from ..core.distributed import make_census_fn_for_mesh
-from ..core.graph import CSRGraph
+from ..core.graph import CSRGraph, next_pow2
 
 # the device accumulator is an int32 (hi, lo) pair: count = hi * 2**30 + lo
 # with 0 <= lo < 2**30 — exact for totals up to 2**61 without enabling x64.
@@ -129,22 +131,22 @@ def make_xla_chunk_fn(meta, config, stats: dict):
     return chunk_fn
 
 
-def make_xla_stream_fn(meta, config, stats: dict, chunk: int):
-    """Device-resident unit: slice + census + accumulate, one dispatch.
+def _xla_stream_body(meta, config, chunk: int):
+    """Single-graph chunk body shared by the scalar and batched xla units.
 
-    ``(arrays, n, dyads_u, dyads_v, n_dyads, start, hi, lo) -> (hi, lo)``.
-    The full (bucket-padded) dyad list stays on device; the chunk at
-    ``start`` is carved out with ``dynamic_slice`` and its partial counts
-    fold into the carried hi/lo accumulator per scan step — the host only
-    ever dispatches.
+    ``(arrays, n, dyads_u, dyads_v, n_dyads, start, hi, lo) -> (hi, lo)``:
+    the chunk at ``start`` is carved out of the device-resident dyad list
+    with ``dynamic_slice`` and its partial counts fold into the carried
+    hi/lo accumulator per scan step.  Dyads at or past ``n_dyads`` are
+    masked invalid, so a graph whose dyad list is shorter than the chunk
+    schedule contributes exactly nothing for the excess chunks — that is
+    what makes the vmapped batch unit bit-identical to sequential runs.
     """
     batch = config.batch
     batch_fn = make_census_batch_fn(meta.k, meta.member_iters,
                                     config.acc_jnp_dtype)
 
-    @jax.jit
-    def stream_fn(arrays, n, du, dv, n_dyads, start, hi, lo):
-        stats["traces"] += 1
+    def body(arrays, n, du, dv, n_dyads, start, hi, lo):
         u = jax.lax.dynamic_slice(du, (start,), (chunk,))
         v = jax.lax.dynamic_slice(dv, (start,), (chunk,))
         valid = (start + jnp.arange(chunk, dtype=jnp.int32)) < n_dyads
@@ -163,7 +165,47 @@ def make_xla_stream_fn(meta, config, stats: dict, chunk: int):
              valid.reshape(steps, batch)))
         return hi, lo
 
+    return body
+
+
+def make_xla_stream_fn(meta, config, stats: dict, chunk: int):
+    """Device-resident unit: slice + census + accumulate, one dispatch.
+
+    ``(arrays, n, dyads_u, dyads_v, n_dyads, start, hi, lo) -> (hi, lo)``.
+    The full (bucket-padded) dyad list stays on device; the host only ever
+    dispatches (see :func:`_xla_stream_body`).
+    """
+    body = _xla_stream_body(meta, config, chunk)
+
+    @jax.jit
+    def stream_fn(arrays, n, du, dv, n_dyads, start, hi, lo):
+        stats["traces"] += 1
+        return body(arrays, n, du, dv, n_dyads, start, hi, lo)
+
     return stream_fn
+
+
+def make_xla_stream_batch_fn(meta, config, stats: dict, chunk: int):
+    """Batched device-resident unit: one dispatch covers B graphs.
+
+    The vmap of :func:`_xla_stream_body` over a leading batch axis on the
+    padded graph arrays, the dyad lists, ``n``/``n_dyads`` and the 16-bin
+    hi/lo accumulator; ``start`` (the chunk cursor) is shared across the
+    batch.  Every same-bucket graph has identical padded shapes, so one
+    trace per batch size serves the whole fleet — and because the census
+    is pure int32/int64 arithmetic, each graph's lane computes exactly the
+    per-graph result (``run_batch`` is bit-identical to sequential
+    ``run`` calls).
+    """
+    body = jax.vmap(_xla_stream_body(meta, config, chunk),
+                    in_axes=(0, 0, 0, 0, 0, None, 0, 0))
+
+    @jax.jit
+    def stream_batch_fn(arrays, n, du, dv, n_dyads, start, hi, lo):
+        stats["traces"] += 1
+        return body(arrays, n, du, dv, n_dyads, start, hi, lo)
+
+    return stream_batch_fn
 
 
 def _run_xla_sync(plan, g: CSRGraph) -> np.ndarray:
@@ -204,6 +246,43 @@ def run_xla(plan, g: CSRGraph) -> np.ndarray:
         plan.stats["chunks"] += 1
         _throttle(window, hi, plan.config.pipeline_depth)
     return _acc_fetch(plan, hi, lo)
+
+
+def run_xla_batch(plan, graphs) -> np.ndarray:
+    """Vmapped device-resident census over B same-bucket graphs.
+
+    Returns ``(B, 16)`` int64 connected + dyadic counts (the type-003
+    closed form is applied per graph by ``CensusPlan.run_batch``).  The
+    batch is padded up to a power of two with inert entries (``m_nbr = 0``
+    so every chunk lane is masked invalid) to bound the number of batch
+    shapes the jitted unit ever traces; the chunk schedule covers the
+    largest dyad count in the batch, shorter graphs no-op on the excess
+    chunks.  One device→host transfer completes the whole batch.
+    """
+    from ..core.graph import stack_graph_arrays
+
+    B = len(graphs)
+    max_dyads = max(g.n_dyads for g in graphs)
+    if max_dyads == 0:
+        return np.zeros((B, 16), dtype=np.int64)
+    pad = next_pow2(B) - B
+    hosts = [plan.padded_arrays_host(g) for g in graphs]
+    arrays = stack_graph_arrays(hosts + [hosts[0]] * pad)
+    m_nbr = jnp.asarray([g.m_nbr for g in graphs] + [0] * pad, jnp.int32)
+    n = jnp.asarray([g.n for g in graphs] + [0] * pad, jnp.int32)
+    n_dyads = jnp.asarray([g.n_dyads for g in graphs] + [0] * pad, jnp.int32)
+    enum = jax.vmap(functools.partial(enumerate_dyads_device,
+                                      out_size=plan.dyad_pad))
+    du, dv = enum(arrays.nbr_ptr, arrays.nbr_idx, m_nbr)
+    hi = lo = jnp.zeros((B + pad, 16), jnp.int32)
+    window: collections.deque = collections.deque()
+    fn = plan.batch_fn()
+    for k in range(-(-max_dyads // plan.chunk)):
+        hi, lo = fn(arrays, n, du, dv, n_dyads,
+                    jnp.int32(k * plan.chunk), hi, lo)
+        plan.stats["chunks"] += 1
+        _throttle(window, hi, plan.config.pipeline_depth)
+    return _acc_fetch(plan, hi, lo)[:B]
 
 
 # ----------------------------------------------------------------------------

@@ -52,8 +52,10 @@ class CensusConfig:
             device-resident pipeline: dyads are enumerated, bucketed and
             chunk-sliced on device, partial counts accumulate **on device**
             across chunks as an int32 hi/lo pair (no x64 requirement), and
-            exactly one device→host transfer happens per run — the paper's
-            single end-of-run merge.  ``False`` restores the synchronous
+            one device→host transfer completes the run — the paper's
+            single end-of-run merge (pallas adds one small control fetch
+            for its bucket schedule: 2 counted syncs, still O(1) in the
+            chunk count).  ``False`` restores the synchronous
             baseline: host-side dyad enumeration, per-chunk upload, and a
             blocking per-chunk device→host transfer with host int64
             accumulation (kept runnable for benchmark comparison via

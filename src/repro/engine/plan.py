@@ -29,15 +29,12 @@ import numpy as np
 
 from ..core.census import CensusResult
 from ..core.graph import CSRGraph, GraphArrays
+from ..core.graph import next_pow2 as _next_pow2
 from . import backends
 from .config import CensusConfig
 
 __all__ = ["GraphMeta", "CensusPlan", "compile_census", "clear_plan_cache",
            "plan_cache_stats", "set_plan_cache_capacity"]
-
-
-def _next_pow2(x: int) -> int:
-    return 1 << max(0, int(x) - 1).bit_length() if x > 1 else 1
 
 
 def _c3(n: int) -> int:
@@ -108,7 +105,9 @@ class CensusPlan:
         d_bucket = max(1, meta.m_nbr_bucket // 2)
         self.dyad_pad = max(self.chunk, -(-d_bucket // self.chunk) * self.chunk)
         self.device_path = config.resolve_device_accum()
-        self.stats = {"traces": 0, "runs": 0, "chunks": 0, "host_syncs": 0}
+        self.stats = {"traces": 0, "runs": 0, "chunks": 0, "host_syncs": 0,
+                      "batch_runs": 0, "batch_graphs": 0}
+        self._batch_fn = None  # lazily-built vmapped unit (xla device path)
         # distributed: per-shard load summary of the most recent run
         # (a backends.TaskStats — plans are cached with a bounded LRU, so
         # only the (n_shards,) weights are retained, never the task arrays).
@@ -143,6 +142,26 @@ class CensusPlan:
                 f"graph (n={g.n}, m={g.m}, m_nbr={g.m_nbr}) exceeds plan "
                 f"buckets {m}; recompile with compile_census(graph, config)")
 
+    def padded_arrays_host(self, g: CSRGraph) -> GraphArrays:
+        """Bucket-padded arrays as host numpy (no device transfer).
+
+        The batched path (:func:`repro.engine.backends.run_xla_batch`)
+        pads + stacks a whole batch on host and ships **one** device put
+        per field — per-graph puts would otherwise dominate small-graph
+        fleet serving.  Padding semantics match :meth:`padded_arrays`.
+        """
+        m = self.meta
+        a = g.arrays
+        out_ptr = np.asarray(a.out_ptr)
+        nbr_ptr = np.asarray(a.nbr_ptr)
+        return GraphArrays(
+            out_ptr=_pad_to(out_ptr, m.n_bucket + 1, out_ptr[-1]),
+            out_idx=_pad_to(np.asarray(a.out_idx), m.m_out_bucket, 0),
+            nbr_ptr=_pad_to(nbr_ptr, m.n_bucket + 1, nbr_ptr[-1]),
+            nbr_idx=_pad_to(np.asarray(a.nbr_idx), m.m_nbr_bucket, 0),
+            nbr_deg=_pad_to(np.asarray(a.nbr_deg), m.n_bucket, 0),
+        )
+
     def padded_arrays(self, g: CSRGraph, *,
                       with_in_csr: Optional[bool] = None) -> GraphArrays:
         """Device arrays padded to the metadata buckets (shape-stable).
@@ -156,20 +175,10 @@ class CensusPlan:
         host round trip.  Default: only for the device-resident pallas
         path, the one consumer of in-arc tiles.
         """
-        m = self.meta
-        a = g.arrays
-        out_ptr = np.asarray(a.out_ptr)
-        nbr_ptr = np.asarray(a.nbr_ptr)
+        host = self.padded_arrays_host(g)
         arrays = GraphArrays(
-            out_ptr=jnp.asarray(_pad_to(out_ptr, m.n_bucket + 1, out_ptr[-1])),
-            out_idx=jnp.asarray(_pad_to(np.asarray(a.out_idx),
-                                        m.m_out_bucket, 0)),
-            nbr_ptr=jnp.asarray(_pad_to(nbr_ptr, m.n_bucket + 1, nbr_ptr[-1])),
-            nbr_idx=jnp.asarray(_pad_to(np.asarray(a.nbr_idx),
-                                        m.m_nbr_bucket, 0)),
-            nbr_deg=jnp.asarray(_pad_to(np.asarray(a.nbr_deg),
-                                        m.n_bucket, 0)),
-        )
+            **{f: (None if v is None else jnp.asarray(v))
+               for f, v in zip(GraphArrays._fields, host)})
         if with_in_csr is None:
             with_in_csr = self.backend == "pallas" and self.device_path
         if with_in_csr:
@@ -182,9 +191,18 @@ class CensusPlan:
     # -- execution -----------------------------------------------------------
 
     def run(self, g: CSRGraph) -> CensusResult:
-        """Execute the census; returns int64 counts for all 16 triad types."""
+        """Execute the census; returns int64 counts for all 16 triad types.
+
+        Semantically the ``B = 1`` case of :meth:`run_batch`; it executes
+        through the single-graph (un-vmapped) units, which produce
+        bit-identical counts — the census is pure integer arithmetic.
+        """
         self._check(g)
         self.stats["runs"] += 1
+        return self._run_one(g)
+
+    def _run_one(self, g: CSRGraph) -> CensusResult:
+        """Backend dispatch + the type-003 closed form (stats pre-counted)."""
         runner = {"xla": backends.run_xla,
                   "distributed": backends.run_distributed,
                   "pallas": backends.run_pallas}[self.backend]
@@ -192,6 +210,56 @@ class CensusPlan:
         # the paper's line 29: null triads via the closed form, on host.
         counts[0] = _c3(g.n) - int(counts.sum())
         return CensusResult(counts=counts)
+
+    def run_batch(self, graphs) -> "list[CensusResult]":
+        """Execute the census on B same-bucket graphs as one batch.
+
+        Every graph must pass this plan's admission check (same metadata
+        buckets — the :class:`GraphMeta` grouping a
+        :class:`repro.serve.CensusService` performs).  On the xla
+        device-resident path the whole batch runs through one vmapped
+        fixed-shape unit — a leading batch axis over the padded graph
+        arrays, the device dyad lists and the 16-bin hi/lo accumulator —
+        so B requests cost one chunk schedule of dispatches and **one**
+        device→host transfer instead of B of each.  Results are
+        bit-identical to B sequential :meth:`run` calls (integer
+        arithmetic; excess chunks for shorter graphs are masked no-ops).
+
+        The pallas / distributed backends and the synchronous baseline
+        (``device_accum=False``) have no vmapped unit yet; there the batch
+        executes member-wise through the single-graph path — same results,
+        amortizing only the plan, not the dispatch.
+
+        Returns one :class:`CensusResult` per graph, in input order.
+        """
+        graphs = list(graphs)
+        if not graphs:
+            return []
+        for g in graphs:
+            self._check(g)
+        self.stats["runs"] += len(graphs)
+        self.stats["batch_runs"] += 1
+        self.stats["batch_graphs"] += len(graphs)
+        if self.backend == "xla" and self.device_path:
+            counts = backends.run_xla_batch(self, graphs)
+            out = []
+            for g, c in zip(graphs, counts):
+                c = c.copy()
+                c[0] = _c3(g.n) - int(c.sum())
+                out.append(CensusResult(counts=c))
+            return out
+        return [self._run_one(g) for g in graphs]
+
+    def batch_fn(self):
+        """The vmapped batched unit (xla device path), built lazily.
+
+        One jitted callable serves every batch size — jit retraces per
+        distinct (power-of-two-padded) B, counted in ``stats['traces']``.
+        """
+        if self._batch_fn is None:
+            self._batch_fn = backends.make_xla_stream_batch_fn(
+                self.meta, self.config, self.stats, self.chunk)
+        return self._batch_fn
 
     def aot_lower(self, g: CSRGraph):
         """Lower the compiled chunk unit at this plan's static shapes.
@@ -300,10 +368,31 @@ def compile_census(graph_meta, config: Optional[CensusConfig] = None, *,
 
 
 def clear_plan_cache() -> None:
+    """Drop every cached plan and reset hit/miss/eviction counters.
+
+    Compiled XLA executables owned by the dropped plans become garbage;
+    use in tests/benchmarks to force cold compiles.
+    """
     _PLAN_CACHE.clear()
     _CACHE_STATS.update(hits=0, misses=0, evictions=0)
 
 
 def plan_cache_stats() -> dict:
+    """Plan-cache counters plus per-entry (per-bucket) metadata.
+
+    Returns ``hits`` / ``misses`` / ``evictions`` / ``size`` /
+    ``capacity`` plus ``entries``: one dict per cached plan, in LRU order
+    (oldest first), holding the bucketized ``meta`` fields, ``backend``,
+    ``device_path``, the resolved streaming ``chunk``, and the plan's
+    live execution counters (``runs``, ``batch_runs``, ``batch_graphs``,
+    ``traces``, ``chunks``, ``host_syncs``).  This is the introspection
+    surface :class:`repro.serve.CensusService` reports per-bucket stats
+    from.
+    """
+    entries = [
+        dict(meta=dataclasses.asdict(p.meta), backend=p.backend,
+             device_path=p.device_path, chunk=p.chunk, **p.stats)
+        for p in _PLAN_CACHE.values()
+    ]
     return {**_CACHE_STATS, "size": len(_PLAN_CACHE),
-            "capacity": _CACHE_CAPACITY}
+            "capacity": _CACHE_CAPACITY, "entries": entries}

@@ -1,3 +1,11 @@
+"""Serving layers: LM token decode + the batched multi-graph census service.
+
+``CensusService`` (see :mod:`repro.serve.census_service`) is the census
+fleet front door: requests are grouped by plan-cache bucket and executed
+as vmapped fixed-shape batches through ``CensusPlan.run_batch``.
+"""
+from .census_service import CensusCompletion, CensusService, ServiceConfig
 from .decode import make_prefill_step, make_serve_step
 
-__all__ = ["make_prefill_step", "make_serve_step"]
+__all__ = ["CensusCompletion", "CensusService", "ServiceConfig",
+           "make_prefill_step", "make_serve_step"]

@@ -1,0 +1,225 @@
+"""Batched multi-graph census serving (the fleet front door).
+
+The engine's plan cache already amortizes *compilation* across same-shape
+graphs; this layer amortizes *dispatch*.  A :class:`CensusService` accepts
+a stream of :class:`~repro.core.graph.CSRGraph` requests, groups them by
+their :class:`~repro.engine.GraphMeta` bucket key (the plan-cache key's
+graph half), and executes each same-bucket group as ONE vmapped
+fixed-shape batch through ``CensusPlan.run_batch`` — B small censuses for
+one chunk schedule of dispatches and one device→host transfer.  That is
+the workload shape of triadic analysis over graph *collections* (Chin et
+al., "Scalable Triadic Analysis of Large-Scale Graphs"): many small
+same-shape graphs, not one giant kernel launch.
+
+Design properties:
+
+  * **Deterministic, clockless batching** — groups flush when they reach
+    ``max_batch`` or when ``max_wait_requests`` newer requests have been
+    submitted since the group's oldest member (bounded staleness without
+    wall-clock timers, so behavior is exactly reproducible in tests).
+  * **Out-of-order completion, stable ids** — ``submit`` returns a
+    monotonically increasing request id; completions surface in batch
+    flush order, each tagged with its id and bucket.
+  * **Per-bucket stats** — batches formed, occupancy, host syncs: the
+    numbers that tell you whether the fleet is actually batching.
+
+Synchronous by construction: batches execute inside ``submit``/``flush``
+on the caller's thread (device work itself is still async under the
+engine's double-buffered dispatcher).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, NamedTuple, Optional
+
+from ..core.census import CensusResult
+from ..core.graph import CSRGraph
+from ..engine import CensusConfig, GraphMeta, compile_census
+
+__all__ = ["CensusCompletion", "CensusService", "ServiceConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Batching policy for a :class:`CensusService`.
+
+    Attributes:
+        max_batch: flush a bucket group as soon as it holds this many
+            requests — the vmapped batch width the service aims for.
+            Larger batches amortize dispatch further but retrace the
+            batched unit once per new (power-of-two-padded) width.
+        max_wait_requests: bounded-staleness valve.  A partial group is
+            force-flushed once this many *other-bucket* requests have
+            been submitted since the group's oldest member — a rare
+            bucket can never wait forever behind hot ones, while a hot
+            bucket's own burst is still allowed to fill to
+            ``max_batch``.  ``0`` disables waiting entirely: every
+            submit flushes immediately (B = 1, the unbatched baseline).
+            Counted in requests, not seconds, so tests are
+            deterministic.
+        census: the :class:`~repro.engine.CensusConfig` every request
+            executes under — the other half of the plan-cache key, so one
+            service maps to at most one cached plan per bucket.
+    """
+
+    max_batch: int = 8
+    max_wait_requests: int = 64
+    census: CensusConfig = dataclasses.field(default_factory=CensusConfig)
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.max_wait_requests < 0:
+            raise ValueError("max_wait_requests must be >= 0")
+
+
+class CensusCompletion(NamedTuple):
+    """One finished request: the id ``submit`` returned, its result, and
+    the metadata bucket it was batched under."""
+
+    request_id: int
+    result: CensusResult
+    meta: GraphMeta
+
+
+class CensusService:
+    """Plan-cache-aware batched census serving over a request stream.
+
+    ::
+
+        svc = CensusService(ServiceConfig(max_batch=8,
+                                          census=CensusConfig(backend="xla")))
+        rid = svc.submit(graph)        # queues; may flush a full batch
+        done = svc.flush()             # force-run all partial groups
+        for c in done:                 # CensusCompletion, flush order
+            ...
+
+    ``mesh`` is forwarded to ``compile_census`` for the distributed
+    backend; leave ``None`` for the default single-host mesh.
+    """
+
+    def __init__(self, config: Optional[ServiceConfig] = None, *, mesh=None):
+        self.config = config or ServiceConfig()
+        self.mesh = mesh
+        self._pending: Dict[GraphMeta, list] = {}   # meta -> [(rid, graph)]
+        self._first_seq: Dict[GraphMeta, int] = {}  # meta -> oldest rid
+        self._completed: List[CensusCompletion] = []
+        self._seq = 0
+        self._bucket_stats: Dict[GraphMeta, dict] = {}
+
+    # -- request path --------------------------------------------------------
+
+    def submit(self, graph: CSRGraph) -> int:
+        """Queue one census request; returns its stable request id.
+
+        If the request fills its bucket group to ``max_batch``, the group
+        executes immediately (synchronously); any group gone stale under
+        ``max_wait_requests`` is flushed too.  Completions are held until
+        :meth:`poll`.
+        """
+        rid = self._seq
+        self._seq += 1
+        meta = GraphMeta.from_graph(graph, k=self.config.census.k)
+        group = self._pending.setdefault(meta, [])
+        if not group:
+            self._first_seq[meta] = rid
+        group.append((rid, graph))
+        st = self._bucket_stats.setdefault(
+            meta, dict(requests=0, batches=0, batched_graphs=0,
+                       host_syncs=0, chunks=0))
+        st["requests"] += 1
+        if len(group) >= self.config.max_batch:
+            self._flush_bucket(meta)
+        # staleness: count only OTHER buckets' arrivals since a group's
+        # oldest member — a hot bucket's own burst must still be allowed
+        # to fill to max_batch.
+        for stale in [m for m, s in self._first_seq.items()
+                      if (self._seq - s - len(self._pending[m])
+                          >= self.config.max_wait_requests)]:
+            self._flush_bucket(stale)
+        return rid
+
+    def poll(self) -> List[CensusCompletion]:
+        """Drain and return completions accumulated since the last poll.
+
+        Order is batch flush order — generally NOT submission order; match
+        on ``request_id``."""
+        out, self._completed = self._completed, []
+        return out
+
+    def flush(self) -> List[CensusCompletion]:
+        """Execute every pending partial group, then drain completions."""
+        for meta in list(self._pending):
+            self._flush_bucket(meta)
+        return self.poll()
+
+    def run_fleet(self, graphs: Iterable[CSRGraph]) -> List[CensusResult]:
+        """Submit a whole fleet, flush, and return results in input order.
+
+        Completions belonging to requests submitted *before* this call
+        (drained by the flush) are retained for the next :meth:`poll` —
+        never discarded.
+        """
+        ids = [self.submit(g) for g in graphs]
+        mine = set(ids)
+        done = {}
+        others = []
+        for c in self.flush():
+            if c.request_id in mine:
+                done[c.request_id] = c.result
+            else:
+                others.append(c)
+        self._completed.extend(others)
+        return [done[i] for i in ids]
+
+    @property
+    def pending(self) -> int:
+        """Number of submitted-but-not-yet-executed requests."""
+        return sum(len(g) for g in self._pending.values())
+
+    # -- execution -----------------------------------------------------------
+
+    def _flush_bucket(self, meta: GraphMeta) -> None:
+        group = self._pending.pop(meta)
+        self._first_seq.pop(meta)
+        plan = compile_census(meta, self.config.census, mesh=self.mesh)
+        before_sync = plan.stats["host_syncs"]
+        before_chunks = plan.stats["chunks"]
+        results = plan.run_batch([g for _, g in group])
+        st = self._bucket_stats[meta]
+        st["batches"] += 1
+        st["batched_graphs"] += len(group)
+        st["host_syncs"] += plan.stats["host_syncs"] - before_sync
+        st["chunks"] += plan.stats["chunks"] - before_chunks
+        self._completed.extend(
+            CensusCompletion(rid, res, meta)
+            for (rid, _), res in zip(group, results))
+
+    # -- introspection -------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Service-level + per-bucket serving statistics.
+
+        ``buckets`` maps each :class:`GraphMeta` to its request/batch
+        counts, ``occupancy`` (batched graphs per flushed batch slot —
+        1.0 means every batch left full), and the host syncs / chunks its
+        batches cost.  ``mean_batch`` is the fleet-wide average batch
+        width — the dispatch amortization factor actually achieved.
+        """
+        buckets = {}
+        total_batches = total_graphs = 0
+        for meta, st in self._bucket_stats.items():
+            occ = (st["batched_graphs"]
+                   / (st["batches"] * self.config.max_batch)
+                   if st["batches"] else 0.0)
+            buckets[meta] = {**st, "occupancy": occ}
+            total_batches += st["batches"]
+            total_graphs += st["batched_graphs"]
+        return dict(
+            requests=self._seq,
+            pending=self.pending,
+            batches=total_batches,
+            mean_batch=(total_graphs / total_batches
+                        if total_batches else 0.0),
+            buckets=buckets,
+        )

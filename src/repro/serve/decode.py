@@ -15,6 +15,12 @@ from ..models.transformer import make_forward
 
 
 def make_prefill_step(cfg: ModelConfig, run: RunConfig, mesh=None, rules=None):
+    """Build the cacheless prefill step: ``(params, tokens) -> logits``.
+
+    Runs the full forward over a ``(B, T)`` prompt batch without touching
+    a decode cache — the shape the prefill-side dry-run cells lower.  Use
+    :func:`make_prefill_cache_step` when decode will follow.
+    """
     fwd = make_forward(cfg, run, mesh, rules)
 
     def prefill_step(params, tokens, positions=None, prefix_embeds=None):
@@ -48,6 +54,13 @@ def make_prefill_cache_step(cfg: ModelConfig, run: RunConfig, mesh=None,
 
 def make_serve_step(cfg: ModelConfig, run: RunConfig, mesh=None, rules=None,
                     *, greedy: bool = True):
+    """Build the single-token decode step:
+    ``(params, cache, tokens, cache_pos[, rng]) -> (next, cache, logits)``.
+
+    One new token per request against a ``seq_len``-deep KV/state cache;
+    ``greedy=False`` samples from the logits with ``rng`` instead of
+    argmax.  This is the unit ``examples/serve_decode.py`` jits and loops.
+    """
     fwd = make_forward(cfg, run, mesh, rules)
 
     def serve_step(params, cache, tokens, cache_pos, rng: Optional[jax.Array] = None):

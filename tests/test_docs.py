@@ -1,0 +1,86 @@
+"""Doc smoke: the docs can't rot.
+
+Every fenced ```python block in README.md and docs/*.md is extracted and
+executed (tiny graphs, interpret mode off-TPU), and the public engine /
+serve API surface is checked for docstrings — including every
+CensusConfig / ServiceConfig field being described in its class
+docstring.
+"""
+import dataclasses
+import inspect
+import pathlib
+import re
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DOC_FILES = [ROOT / "README.md",
+             *sorted((ROOT / "docs").glob("*.md"))]
+
+
+def _python_blocks():
+    params = []
+    for path in DOC_FILES:
+        text = path.read_text()
+        for i, m in enumerate(re.finditer(r"```python\n(.*?)```", text,
+                                          re.DOTALL)):
+            params.append(pytest.param(path, m.group(1),
+                                       id=f"{path.name}-{i}"))
+    return params
+
+
+def test_docs_exist_and_are_substantial():
+    for required in ("docs/ARCHITECTURE.md", "docs/PAPER_MAPPING.md"):
+        p = ROOT / required
+        assert p.exists(), f"{required} is missing"
+        assert len(p.read_text()) > 2000, f"{required} is a stub"
+    # both docs must carry executable examples
+    names = {p.name for p, _ in
+             ((pp.values[0], pp.values[1]) for pp in _python_blocks())}
+    assert {"README.md", "ARCHITECTURE.md", "PAPER_MAPPING.md"} <= names
+
+
+@pytest.mark.parametrize("path,code", _python_blocks())
+def test_doc_block_executes(path, code):
+    """Each fenced python block is a self-contained runnable example."""
+    exec(compile(code, f"{path.name}", "exec"), {"__name__": "__doc_smoke__"})
+
+
+def _public_api():
+    import repro.engine as engine
+    import repro.serve as serve
+
+    for mod in (engine, serve):
+        for name in mod.__all__:
+            yield mod.__name__, name, getattr(mod, name)
+
+
+@pytest.mark.parametrize("mod,name,obj", [
+    pytest.param(m, n, o, id=f"{m}.{n}") for m, n, o in _public_api()
+    if inspect.isclass(o) or callable(o)])
+def test_public_api_has_docstrings(mod, name, obj):
+    doc = inspect.getdoc(obj)
+    assert doc and len(doc.strip()) > 20, f"{mod}.{name} lacks a docstring"
+
+
+@pytest.mark.parametrize("cls_path", ["repro.engine:CensusConfig",
+                                      "repro.serve:ServiceConfig"])
+def test_config_docstrings_cover_every_field(cls_path):
+    """Every config knob is described in its class docstring — new fields
+    can't land undocumented."""
+    mod_name, cls_name = cls_path.split(":")
+    import importlib
+    cls = getattr(importlib.import_module(mod_name), cls_name)
+    doc = inspect.getdoc(cls)
+    for f in dataclasses.fields(cls):
+        assert re.search(rf"\b{re.escape(f.name)}\b", doc), (
+            f"{cls_name} docstring does not document field {f.name!r}")
+
+
+def test_plan_public_methods_have_docstrings():
+    from repro.engine import CensusPlan
+
+    for name in ("run", "run_batch", "padded_arrays", "padded_arrays_host",
+                 "aot_lower", "batch_fn"):
+        doc = inspect.getdoc(getattr(CensusPlan, name))
+        assert doc and len(doc.strip()) > 20, f"CensusPlan.{name}"

@@ -1,0 +1,110 @@
+"""Graph input: Pajek/edge-list loader round trips + generator determinism.
+
+Covers ``core/graph.py::load_pajek_or_edgelist`` and
+``core/generators.py::paper_profile`` — the two untested data-entry
+points the docs point real-cluster users at.
+"""
+import numpy as np
+import pytest
+
+from repro.core import brute_force_census, from_edges, load_pajek_or_edgelist
+from repro.core.generators import PAPER_DATASETS, paper_profile
+from repro.core.graph import dense_adjacency
+
+
+def _write(tmp_path, name, text):
+    p = tmp_path / name
+    p.write_text(text)
+    return str(p)
+
+
+def test_pajek_round_trip(tmp_path):
+    """Pajek *Vertices/*Arcs/*Edges (1-indexed, labeled vertex lines)
+    reproduces the graph built directly with from_edges (0-indexed)."""
+    path = _write(tmp_path, "g.net", """\
+% a Pajek file, as exported by real SNA tools
+*Vertices 6
+1 "alice"
+2 "bob"
+3 "carol"
+4 "dave"
+5 "erin"
+6 "frank"
+*Arcs
+1 2
+2 3
+3 1
+*Edges
+4 5
+""")
+    g = load_pajek_or_edgelist(path)
+    # arcs are directed; each *Edges line materializes both directions
+    want = from_edges(6, [0, 1, 2, 3, 4], [1, 2, 0, 4, 3], directed=True)
+    assert (g.n, g.m, g.m_nbr) == (want.n, want.m, want.m_nbr) == (6, 5, 8)
+    assert (dense_adjacency(g) == dense_adjacency(want)).all()
+    assert (brute_force_census(g).counts
+            == brute_force_census(want).counts).all()
+
+
+def test_pajek_vertex_count_beats_max_id(tmp_path):
+    """*Vertices pins n even when trailing vertices are isolated."""
+    path = _write(tmp_path, "iso.net", "*Vertices 9\n*Arcs\n1 2\n")
+    g = load_pajek_or_edgelist(path)
+    assert g.n == 9 and g.m == 1
+
+
+def test_plain_edgelist_zero_indexed(tmp_path):
+    """Bare `u v` lines: 0-indexed, n inferred, comments/blanks skipped."""
+    path = _write(tmp_path, "g.txt", """\
+# comment
+% other comment style
+
+0 1
+1 2
+2 0
+2 0
+""")
+    g = load_pajek_or_edgelist(path)
+    want = from_edges(3, [0, 1, 2], [1, 2, 0])  # duplicate arc deduped
+    assert (g.n, g.m) == (3, 3)
+    assert (dense_adjacency(g) == dense_adjacency(want)).all()
+
+
+def test_edgelist_census_matches_oracle(tmp_path):
+    rng = np.random.default_rng(3)
+    src, dst = rng.integers(0, 12, 30), rng.integers(0, 12, 30)
+    lines = "\n".join(f"{u} {v}" for u, v in zip(src, dst))
+    g = load_pajek_or_edgelist(_write(tmp_path, "r.txt", lines))
+    want = from_edges(12, src, dst)
+    assert (brute_force_census(g).counts
+            == brute_force_census(want).counts).all()
+
+
+def test_paper_profile_deterministic():
+    """Same (name, scale_down, seed) -> bit-identical graph arrays."""
+    a = paper_profile("slashdot", scale_down=2048.0, seed=7)
+    b = paper_profile("slashdot", scale_down=2048.0, seed=7)
+    assert (a.n, a.m, a.m_nbr, a.max_deg) == (b.n, b.m, b.m_nbr, b.max_deg)
+    for f in ("out_ptr", "out_idx", "nbr_ptr", "nbr_idx", "nbr_deg"):
+        assert (np.asarray(getattr(a.arrays, f))
+                == np.asarray(getattr(b.arrays, f))).all()
+    # a different seed is a different realization of the same profile
+    c = paper_profile("slashdot", scale_down=2048.0, seed=8)
+    assert c.n == a.n
+    assert not (np.asarray(c.arrays.out_idx).tolist()
+                == np.asarray(a.arrays.out_idx).tolist())
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_DATASETS))
+def test_paper_profile_shapes(name):
+    """Every Table 4.1 profile builds: pow2 vertex count >= 64, CSR
+    invariants hold, and undirected datasets come out mutual."""
+    g = paper_profile(name, scale_down=4096.0, seed=0)
+    assert g.n >= 64 and (g.n & (g.n - 1)) == 0  # R-MAT: power of two
+    ptr = np.asarray(g.arrays.out_ptr)
+    assert ptr.shape == (g.n + 1,) and ptr[0] == 0 and ptr[-1] == g.m
+    assert (np.diff(ptr) >= 0).all()
+    nbr_ptr = np.asarray(g.arrays.nbr_ptr)
+    assert nbr_ptr[-1] == g.m_nbr and g.m_nbr % 2 == 0
+    if not PAPER_DATASETS[name][2]:  # undirected: every arc is mutual
+        assert g.m_nbr == g.m

@@ -418,6 +418,78 @@ def bench_serve(scale: float, *, smoke: bool = False,
     print(f"# wrote {out}")
 
 
+def bench_ops(scale: float, *, smoke: bool = False,
+              out: str = "BENCH_census.json"):
+    """``--ops``: per-op and fused-vs-separate throughput (the GraphOp
+    layer's claim, measured).
+
+    Times each registered analytic as its own pass, then all of them as
+    ONE fused pass over the same dyad stream; since the workload is
+    memory-bound (the traversal dominates), the fused pass should beat
+    the sum of separate passes.  Results merge into ``BENCH_census.json``
+    under ``"ops"``: per-op warm time + host syncs, fused time, and the
+    ``fused_speedup`` ratio.
+    """
+    from repro.core import generators
+    from repro.engine import EngineConfig, clear_plan_cache, compile
+
+    names = ("triad_census", "dyad_census", "degree_stats",
+             "triadic_profile")
+    if smoke:
+        g = generators.rmat(8, edge_factor=4, seed=0)
+        cfg = EngineConfig(backend="xla", batch=256, chunk_dyads=512)
+        reps = 5
+    else:
+        g = generators.paper_profile("slashdot", scale_down=64 / scale)
+        cfg = EngineConfig(backend="xla", batch=256, chunk_dyads=2048)
+        reps = 4
+    clear_plan_cache()
+    solo_plans = {nm: compile(g, (nm,), cfg) for nm in names}
+    fused_plan = compile(g, names, cfg)
+    for p in (*solo_plans.values(), fused_plan):  # warm every trace
+        p.run(g)
+
+    def timed(fn):
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    per_op = []
+    separate_s = 0.0
+    for nm, plan in solo_plans.items():
+        s0 = plan.stats["host_syncs"]
+        r0 = plan.stats["runs"]
+        warm = timed(lambda p=plan: p.run(g))
+        per_op.append(dict(
+            op=nm, warm_s=warm, dyads_per_sec=g.n_dyads / max(warm, 1e-9),
+            host_syncs_per_run=((plan.stats["host_syncs"] - s0)
+                                / (plan.stats["runs"] - r0))))
+        separate_s += warm
+        print(f"census_op_{nm},{warm * 1e6:.0f},"
+              f"syncs_per_run={per_op[-1]['host_syncs_per_run']:.0f}")
+    s0 = fused_plan.stats["host_syncs"]
+    r0 = fused_plan.stats["runs"]
+    fused_s = timed(lambda: fused_plan.run(g))
+    fused_syncs = ((fused_plan.stats["host_syncs"] - s0)
+                   / (fused_plan.stats["runs"] - r0))
+    speedup = separate_s / max(fused_s, 1e-9)
+    print(f"census_ops_fused_{len(names)}way,{fused_s * 1e6:.0f},"
+          f"separate_s={separate_s * 1e6:.0f}us"
+          f",fused_speedup={speedup:.2f}x,syncs_per_run={fused_syncs:.0f}")
+    _merge_json(out, schema=1, jax_backend=jax.default_backend(),
+                ops=dict(smoke=smoke, graph=dict(n=g.n, m=g.m,
+                                                 dyads=g.n_dyads),
+                         backend=cfg.backend, per_op=per_op,
+                         fused=dict(ops=list(names), warm_s=fused_s,
+                                    host_syncs_per_run=fused_syncs,
+                                    separate_s=separate_s,
+                                    fused_speedup=speedup)))
+    print(f"# wrote {out}")
+
+
 def bench_lm_smoke(scale: float):
     """Framework-side: smoke-scale train-step latency per arch."""
     from repro.config import RunConfig, get_config, list_configs
@@ -451,6 +523,10 @@ def main() -> None:
                     help="fleet serving bench: batched CensusService vs "
                          "sequential plan.run requests/sec (merges a "
                          "'serve' section into the JSON)")
+    ap.add_argument("--ops", action="store_true",
+                    help="GraphOp bench: per-op passes vs one fused "
+                         "multi-analytic pass (merges an 'ops' section "
+                         "into the JSON)")
     ap.add_argument("--sync-baseline", action="store_true",
                     help="also time the synchronous (device_accum=False) "
                          "data path for an A/B speedup in the JSON")
@@ -466,6 +542,9 @@ def main() -> None:
     if args.serve:
         bench_serve(args.scale, smoke=args.smoke, out=args.out)
         return
+    if args.ops:
+        bench_ops(args.scale, smoke=args.smoke, out=args.out)
+        return
     if args.smoke:
         device_pipeline(args.scale)
         return
@@ -478,6 +557,7 @@ def main() -> None:
         "engine_cache": bench_engine_cache,
         "device_pipeline": device_pipeline,
         "serve": lambda s: bench_serve(s, smoke=False, out=args.out),
+        "ops": lambda s: bench_ops(s, smoke=False, out=args.out),
         "lm_smoke": bench_lm_smoke,
     }
     only = [s for s in args.only.split(",") if s]

@@ -44,18 +44,29 @@ def main():
     svc = CensusService(cfg)
     fleet = build_fleet(args.fleet)
 
-    print(f"submitting {len(fleet)} census requests "
-          f"(max_batch={args.max_batch}, max_wait={args.max_wait}) ...")
+    print(f"submitting {len(fleet)} requests "
+          f"(max_batch={args.max_batch}, max_wait={args.max_wait}; every "
+          f"4th asks for a fused census+degree_stats pass) ...")
+
+    def describe(c):
+        if isinstance(c.result, dict):  # multi-op request
+            ds = c.result["degree_stats"]
+            return (f"total={c.result['triad_census'].total:,} "
+                    f"max_out={ds.max_out}")
+        return f"total={c.result.total:,}"
+
     t0 = time.perf_counter()
-    for g in fleet:
-        rid = svc.submit(g)
+    for i, g in enumerate(fleet):
+        # a mixed-analytic stream: groups batch by (bucket, ops) key
+        ops = ("triad_census", "degree_stats") if i % 4 == 3 else None
+        rid = svc.submit(g, ops)
         for c in svc.poll():  # completions surface in batch flush order
             print(f"  completed request {c.request_id:>3} "
-                  f"(bucket n<={c.meta.n_bucket}, k={c.meta.k}): "
-                  f"total={c.result.total:,}")
+                  f"(bucket n<={c.meta.n_bucket}, k={c.meta.k}, "
+                  f"ops={'+'.join(c.ops)}): {describe(c)}")
     for c in svc.flush():  # drain the partial groups
         print(f"  completed request {c.request_id:>3} (drain): "
-              f"total={c.result.total:,}")
+              f"{describe(c)}")
     dt = time.perf_counter() - t0
 
     st = svc.stats()

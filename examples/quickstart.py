@@ -30,6 +30,12 @@ def census_demo():
         if c:
             print(f"  {name:5s} {c:>14,}")
     print(f"  total {res.total:,} == C(n,3) ✓")
+    # the fused multi-analytic pass: more results, same traversal
+    from repro.engine import EngineConfig, compile
+    multi = compile(g, ["triad_census", "dyad_census", "triadic_profile"],
+                    EngineConfig(backend="auto")).run(g)
+    print(f"fused pass: {multi['dyad_census']}, transitivity="
+          f"{multi['triadic_profile'].transitivity:.4f}")
     tasks = pack_tasks(g, 16, strategy="sorted_snake")
     print(f"16-shard balance (sorted_snake): imbalance={tasks.imbalance:.4f}")
 

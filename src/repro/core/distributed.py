@@ -31,20 +31,27 @@ from .census import make_census_batch_fn
 from .graph import CSRGraph
 
 
-def make_census_fn_for_mesh(mesh: jax.sharding.Mesh, *, K: int,
-                            member_iters: int, batch: int = 256,
-                            acc_dtype=jnp.int32, on_trace=None):
-    """Build a shard_map'd census over every device of ``mesh``.
+def make_census_fn_for_mesh(mesh: jax.sharding.Mesh, *, K: int | None = None,
+                            member_iters: int | None = None, batch: int = 256,
+                            acc_dtype=jnp.int32, on_trace=None,
+                            batch_fn=None, n_bins: int = 16):
+    """Build a shard_map'd per-batch kernel sweep over every device of
+    ``mesh``.
 
-    The single definition of the SPMD schedule — both the legacy
+    The single definition of the SPMD schedule — the legacy
     ``make_distributed_census_fn`` and the engine's distributed backend
-    call this.  The returned jitted fn takes ``(graph_arrays, n, tasks_u,
-    tasks_v, valid)`` with task arrays shaped ``(n_devices, L)`` (L a
-    multiple of ``batch``) and returns the merged ``(16,)``
-    connected/dyadic census.  ``on_trace`` (if set) is invoked as a
+    both call this.  The returned jitted fn takes ``(graph_arrays, n,
+    tasks_u, tasks_v, valid)`` with task arrays shaped ``(n_devices, L)``
+    (L a multiple of ``batch``) and returns the merged ``(n_bins,)``
+    partial counts.  By default the kernel is the triad census built from
+    ``K`` / ``member_iters``; the engine's fused multi-analytic path
+    passes its own ``batch_fn`` (any ``(arrays, n, u, v, valid) ->
+    (n_bins,)`` additive kernel — see :mod:`repro.engine.ops`) plus the
+    matching ``n_bins``.  ``on_trace`` (if set) is invoked as a
     trace-time side effect — the engine uses it to count retraces.
     """
-    batch_fn = make_census_batch_fn(K, member_iters, acc_dtype)
+    if batch_fn is None:
+        batch_fn = make_census_batch_fn(K, member_iters, acc_dtype)
     axes = tuple(mesh.axis_names)
 
     def device_census(arrays, n, u, v, valid):
@@ -58,7 +65,7 @@ def make_census_fn_for_mesh(mesh: jax.sharding.Mesh, *, K: int,
             uu, vv, va = xs
             return carry + batch_fn(arrays, n, uu, vv, va), None
 
-        init = compat.pvary(jnp.zeros((16,), acc_dtype), axes)
+        init = compat.pvary(jnp.zeros((n_bins,), acc_dtype), axes)
         counts, _ = jax.lax.scan(
             step, init,
             (u.reshape(steps, batch), v.reshape(steps, batch),

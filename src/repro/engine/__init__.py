@@ -1,9 +1,18 @@
-"""One front door for the Triad Census: config -> plan -> result.
+"""One front door for graph analytics: config -> plan -> results.
 
-    from repro.engine import CensusConfig, compile_census
+    from repro.engine import EngineConfig, compile
 
-    plan = compile_census(graph, CensusConfig(backend="auto"))
-    result = plan.run(graph)          # CensusResult, int64 counts
+    plan = compile(graph, ["triad_census", "dyad_census", "degree_stats"],
+                   EngineConfig(backend="auto"))
+    results = plan.run(graph)        # {op_name: result}, one fused pass
+
+Analytics are pluggable :class:`~repro.engine.ops.GraphOp` instances
+(``triad_census``, ``dyad_census``, ``degree_stats``,
+``triadic_profile`` ship built in; :func:`register_op` adds more) and any
+number of them execute in **one fused pass** over the streaming dyad
+pipeline: one traversal, one on-device hi/lo accumulator with a slice
+per op, one device→host transfer — the memory-bound part of irregular
+graph analytics (the traversal) is paid once for the whole op set.
 
 Backends (the paper's architecture comparison, one algorithm definition):
 
@@ -13,26 +22,36 @@ Backends (the paper's architecture comparison, one algorithm definition):
     "auto"         — resolved from the visible hardware
 
 Plans are cached in a bounded LRU keyed on bucketized graph metadata +
-config (see :mod:`repro.engine.plan`), and execution streams the dyad
-list in bounded-memory chunks through a device-resident pipeline:
-on-device dyad enumeration, async double-buffered chunk dispatch, and an
-on-device cross-chunk accumulator with one device→host transfer per run
-(see :mod:`repro.engine.backends`).  ``CensusPlan.run_batch`` executes B
-same-bucket graphs as one vmapped batch (``plan.run`` is the B = 1
-case); :class:`repro.serve.CensusService` builds fleet serving on top.
-The legacy entry points ``triad_census``, ``triad_census_kernel`` and
+op names + config (see :mod:`repro.engine.plan`), and execution streams
+the dyad list in bounded-memory chunks through a device-resident
+pipeline: on-device dyad enumeration, async double-buffered chunk
+dispatch, and an on-device cross-chunk accumulator with one device→host
+transfer per run (see :mod:`repro.engine.backends`).  ``Plan.run_batch``
+executes B same-bucket graphs as one vmapped batch (``plan.run`` is the
+B = 1 case); :class:`repro.serve.CensusService` builds mixed-analytic
+fleet serving on top.
+
+The census-era API is intact: ``CensusConfig`` is the same class as
+``EngineConfig``, and ``compile_census`` / :class:`CensusPlan` are thin
+views over ``compile(graph, ("triad_census",), config)`` — the SAME
+cache entries, bit-identical results.  The legacy entry points
+``triad_census``, ``triad_census_kernel`` and
 ``distributed_triad_census`` are deprecated shims over this module.
 
 Architecture walk-through: ``docs/ARCHITECTURE.md``; paper-concept index:
 ``docs/PAPER_MAPPING.md``.
 """
 from ..core.census import CensusResult
-from .config import BACKENDS, CensusConfig
-from .plan import (CensusPlan, GraphMeta, clear_plan_cache, compile_census,
-                   plan_cache_stats, set_plan_cache_capacity)
+from .config import BACKENDS, CensusConfig, EngineConfig
+from .ops import (DegreeStats, DyadCensus, GraphOp, TriadicProfile, get_op,
+                  list_ops, register_op)
+from .plan import (CensusPlan, GraphMeta, Plan, clear_plan_cache, compile,
+                   compile_census, plan_cache_stats, set_plan_cache_capacity)
 
 __all__ = [
-    "BACKENDS", "CensusConfig", "CensusPlan", "CensusResult", "GraphMeta",
-    "clear_plan_cache", "compile_census", "plan_cache_stats",
+    "BACKENDS", "CensusConfig", "CensusPlan", "CensusResult", "DegreeStats",
+    "DyadCensus", "EngineConfig", "GraphMeta", "GraphOp", "Plan",
+    "TriadicProfile", "clear_plan_cache", "compile", "compile_census",
+    "get_op", "list_ops", "plan_cache_stats", "register_op",
     "set_plan_cache_capacity",
 ]

@@ -1,24 +1,37 @@
-"""Backend execution strategies for the census engine.
+"""Backend execution strategies for the fused graph-analytic engine.
 
 Each backend exposes the same contract to :mod:`repro.engine.plan`:
 
   * a ``make_*`` builder producing ONE compiled unit whose input shapes
-    depend only on (graph-metadata buckets, config) — never on the actual
-    dyad count — so a single trace serves every same-shape graph and every
-    streaming chunk, and
+    depend only on (graph-metadata buckets, op layout, config) — never on
+    the actual dyad count — so a single trace serves every same-shape
+    graph and every streaming chunk, and
   * a ``run_*`` driver that walks the canonical-dyad list in bounded-memory
-    chunks.
+    chunks and returns the fused raw int64 bins (one slice per op kernel —
+    see :class:`repro.engine.ops.OpLayout`; host-side finalize lives in
+    the ops).
 
-Two data paths exist per backend (``CensusConfig.device_accum``):
+The fused pass folds three kinds of contribution into one accumulator:
+
+  * per-batch kernels (``OpLayout.batch_kernel``) — evaluated on every
+    scan step of every chunk, concatenated across ops;
+  * per-run ``once`` kernels (vertex-space analytics such as
+    ``degree_stats``) — folded by the driver exactly once per run, into
+    the on-device accumulator before the chunk loop;
+  * the pallas census tile kernel, which fills the ``triad_census`` slice
+    in place of that op's generic batch kernel on the pallas backend.
+
+Two data paths exist per backend (``EngineConfig.device_accum``):
 
   * **device-resident (default)** — dyads are enumerated / bucketed / chunk
     -sliced on device, chunk ``k + pipeline_depth`` is dispatched while
-    chunk ``k`` still computes (async double buffering), and the 16-bin
+    chunk ``k`` still computes (async double buffering), and the fused
     partial counts accumulate **on device** across chunks as an int32
     hi/lo pair (no x64 requirement).  One device→host transfer completes
-    the run — the paper's single end-of-run merge.  (The pallas backend
-    adds one small control fetch per run for its bucket schedule, so its
-    counted syncs are 2, still O(1) in the chunk count.)
+    the run — the paper's single end-of-run merge — *regardless of how
+    many ops are fused*.  (The pallas backend adds one small control fetch
+    per run for its bucket schedule, so its counted syncs are 2, still
+    O(1) in the chunk count.)
   * **synchronous baseline** — the PR-1 path: host numpy dyad slicing,
     per-chunk upload, and a blocking per-chunk device→host transfer with
     host int64 accumulation.  Kept runnable for A/B benchmarking
@@ -27,8 +40,9 @@ Two data paths exist per backend (``CensusConfig.device_accum``):
 ``plan.stats["host_syncs"]`` counts blocking device→host transfers so the
 O(chunks) → O(1) claim is measurable, not asserted.
 
-The null-triad (type 003) closed form is applied once, in plan.py, after
-the chunk loop — backends only ever produce connected + dyadic counts.
+Closed forms (null triads/dyads, degree means) are applied by each op's
+``finalize``, on host, after the chunk loop — backends only ever produce
+the raw streamed/once bins.
 """
 from __future__ import annotations
 
@@ -43,8 +57,7 @@ import numpy as np
 
 from ..core import balance
 from ..core.census import (canonical_dyads, enumerate_dyads_device,
-                           make_census_batch_fn, pad_dyads,
-                           sort_dyads_by_bucket)
+                           pad_dyads, sort_dyads_by_bucket)
 from ..core.distributed import make_census_fn_for_mesh
 from ..core.graph import CSRGraph, next_pow2
 
@@ -52,7 +65,7 @@ from ..core.graph import CSRGraph, next_pow2
 # with 0 <= lo < 2**30 — exact for totals up to 2**61 without enabling x64.
 # Per-fold deltas must stay below 2**30, which holds whenever
 # batch * n < 2**30 (the same order of invariant the int32 scan partials
-# already required).
+# already required; GraphOp kernels promise the same bound).
 _ACC_SHIFT = 30
 
 
@@ -82,6 +95,32 @@ def _throttle(window: collections.deque, ref, depth: int) -> None:
         window.popleft().block_until_ready()
 
 
+def _once_sync(plan, counts: np.ndarray, arrays, n) -> None:
+    """Fold the per-run ``once`` contribution on the synchronous paths.
+
+    The device-resident drivers fold it into the on-device accumulator
+    before the chunk loop (:func:`_once_device`); the sync baselines
+    fetch it once per run instead (counted — the baseline already pays
+    one transfer per chunk).
+    """
+    once = plan.layout.once_jitted()
+    if once is not None:
+        counts += np.asarray(once(arrays, n), dtype=np.int64)
+        plan.stats["host_syncs"] += 1
+
+
+def _once_device(plan, hi, lo, arrays, n, *, batched: bool = False):
+    """Fold the per-run ``once`` contribution on device, before the chunk
+    loop — evaluated exactly once per run, so the chunk units never
+    re-dispatch its vertex-space work, and nothing leaves the device (no
+    counted sync)."""
+    once = (plan.layout.once_batch_jitted() if batched
+            else plan.layout.once_jitted())
+    if once is None:
+        return hi, lo
+    return _acc_update(hi, lo, once(arrays, n))
+
+
 class TaskStats(NamedTuple):
     """Lightweight per-shard load summary kept on the plan after a
     distributed run (the full ShardedTasks arrays are NOT retained — plans
@@ -102,17 +141,17 @@ class TaskStats(NamedTuple):
 # ----------------------------------------------------------------------------
 
 
-def make_xla_chunk_fn(meta, config, stats: dict):
-    """Jitted ``(arrays, n, u, v, valid) -> (steps, 16)`` over one chunk.
+def make_xla_chunk_fn(layout, config, stats: dict):
+    """Jitted ``(arrays, n, u, v, valid) -> (steps, total_bins)`` per chunk.
 
     The synchronous-baseline unit: ``u/v/valid`` arrive padded to
     ``config.resolve_chunk()`` dyads, so the trace is reused across chunks
     and across same-bucket graphs; ``stats['traces']`` counts actual
-    retraces (trace-time side effect).
+    retraces (trace-time side effect).  Each scan step evaluates the fused
+    multi-op batch kernel.
     """
     batch = config.batch
-    batch_fn = make_census_batch_fn(meta.k, meta.member_iters,
-                                    config.acc_jnp_dtype)
+    fused = layout.batch_kernel()
 
     @jax.jit
     def chunk_fn(arrays, n, u, v, valid):
@@ -121,30 +160,32 @@ def make_xla_chunk_fn(meta, config, stats: dict):
 
         def step(carry, xs):
             uu, vv, va = xs
-            return carry, batch_fn(arrays, n, uu, vv, va)
+            return carry, fused(arrays, n, uu, vv, va)
 
         _, partials = jax.lax.scan(
             step, 0, (u.reshape(steps, batch), v.reshape(steps, batch),
                       valid.reshape(steps, batch)))
-        return partials  # (steps, 16)
+        return partials  # (steps, total_bins)
 
     return chunk_fn
 
 
-def _xla_stream_body(meta, config, chunk: int):
+def _xla_stream_body(layout, config, chunk: int):
     """Single-graph chunk body shared by the scalar and batched xla units.
 
     ``(arrays, n, dyads_u, dyads_v, n_dyads, start, hi, lo) -> (hi, lo)``:
     the chunk at ``start`` is carved out of the device-resident dyad list
-    with ``dynamic_slice`` and its partial counts fold into the carried
-    hi/lo accumulator per scan step.  Dyads at or past ``n_dyads`` are
-    masked invalid, so a graph whose dyad list is shorter than the chunk
-    schedule contributes exactly nothing for the excess chunks — that is
-    what makes the vmapped batch unit bit-identical to sequential runs.
+    with ``dynamic_slice`` and its fused partial counts fold into the
+    carried hi/lo accumulator per scan step (per-run ``once``
+    contributions are the driver's job — :func:`_once_device` — so no
+    chunk re-dispatches vertex-space work).  Dyads at or past ``n_dyads``
+    are masked invalid, so a graph whose dyad list is shorter than the
+    chunk schedule contributes exactly nothing for the excess chunks —
+    that is what makes the vmapped batch unit bit-identical to sequential
+    runs.
     """
     batch = config.batch
-    batch_fn = make_census_batch_fn(meta.k, meta.member_iters,
-                                    config.acc_jnp_dtype)
+    fused = layout.batch_kernel()
 
     def body(arrays, n, du, dv, n_dyads, start, hi, lo):
         u = jax.lax.dynamic_slice(du, (start,), (chunk,))
@@ -157,7 +198,7 @@ def _xla_stream_body(meta, config, chunk: int):
         def step(carry, xs):
             uu, vv, va = xs
             h, l = carry
-            return _acc_update(h, l, batch_fn(arrays, n, uu, vv, va)), None
+            return _acc_update(h, l, fused(arrays, n, uu, vv, va)), None
 
         (hi, lo), _ = jax.lax.scan(
             step, (hi, lo),
@@ -168,14 +209,15 @@ def _xla_stream_body(meta, config, chunk: int):
     return body
 
 
-def make_xla_stream_fn(meta, config, stats: dict, chunk: int):
-    """Device-resident unit: slice + census + accumulate, one dispatch.
+def make_xla_stream_fn(layout, config, stats: dict, chunk: int):
+    """Device-resident unit: slice + fused kernels + accumulate, one
+    dispatch.
 
     ``(arrays, n, dyads_u, dyads_v, n_dyads, start, hi, lo) -> (hi, lo)``.
     The full (bucket-padded) dyad list stays on device; the host only ever
     dispatches (see :func:`_xla_stream_body`).
     """
-    body = _xla_stream_body(meta, config, chunk)
+    body = _xla_stream_body(layout, config, chunk)
 
     @jax.jit
     def stream_fn(arrays, n, du, dv, n_dyads, start, hi, lo):
@@ -185,19 +227,19 @@ def make_xla_stream_fn(meta, config, stats: dict, chunk: int):
     return stream_fn
 
 
-def make_xla_stream_batch_fn(meta, config, stats: dict, chunk: int):
+def make_xla_stream_batch_fn(layout, config, stats: dict, chunk: int):
     """Batched device-resident unit: one dispatch covers B graphs.
 
     The vmap of :func:`_xla_stream_body` over a leading batch axis on the
-    padded graph arrays, the dyad lists, ``n``/``n_dyads`` and the 16-bin
+    padded graph arrays, the dyad lists, ``n``/``n_dyads`` and the fused
     hi/lo accumulator; ``start`` (the chunk cursor) is shared across the
     batch.  Every same-bucket graph has identical padded shapes, so one
-    trace per batch size serves the whole fleet — and because the census
-    is pure int32/int64 arithmetic, each graph's lane computes exactly the
+    trace per batch size serves the whole fleet — and because every op is
+    pure int32/int64 arithmetic, each graph's lane computes exactly the
     per-graph result (``run_batch`` is bit-identical to sequential
     ``run`` calls).
     """
-    body = jax.vmap(_xla_stream_body(meta, config, chunk),
+    body = jax.vmap(_xla_stream_body(layout, config, chunk),
                     in_axes=(0, 0, 0, 0, 0, None, 0, 0))
 
     @jax.jit
@@ -210,12 +252,13 @@ def make_xla_stream_batch_fn(meta, config, stats: dict, chunk: int):
 
 def _run_xla_sync(plan, g: CSRGraph) -> np.ndarray:
     u, v = canonical_dyads(g)
-    counts = np.zeros(16, dtype=np.int64)
+    counts = np.zeros(plan.layout.total_bins, dtype=np.int64)
     if not len(u):
         return counts
     chunk = plan.chunk
     arrays = plan.padded_arrays(g)
     n = jnp.int32(g.n)
+    _once_sync(plan, counts, arrays, n)
     for s in range(0, len(u), chunk):
         uu, vv, valid = pad_dyads(u[s:s + chunk], v[s:s + chunk], chunk)
         partials = plan._fn(arrays, n, jnp.asarray(uu), jnp.asarray(vv),
@@ -230,14 +273,15 @@ def run_xla(plan, g: CSRGraph) -> np.ndarray:
     if not plan.device_path:
         return _run_xla_sync(plan, g)
     if g.n_dyads == 0:
-        return np.zeros(16, dtype=np.int64)
+        return np.zeros(plan.layout.total_bins, dtype=np.int64)
     arrays = plan.padded_arrays(g)
     du, dv = enumerate_dyads_device(arrays.nbr_ptr, arrays.nbr_idx,
                                     jnp.int32(g.m_nbr),
                                     out_size=plan.dyad_pad)
     n = jnp.int32(g.n)
     n_dyads = jnp.int32(g.n_dyads)
-    hi = lo = jnp.zeros(16, jnp.int32)
+    hi = lo = jnp.zeros(plan.layout.total_bins, jnp.int32)
+    hi, lo = _once_device(plan, hi, lo, arrays, n)
     window: collections.deque = collections.deque()
     n_chunks = -(-g.n_dyads // plan.chunk)
     for k in range(n_chunks):
@@ -249,22 +293,23 @@ def run_xla(plan, g: CSRGraph) -> np.ndarray:
 
 
 def run_xla_batch(plan, graphs) -> np.ndarray:
-    """Vmapped device-resident census over B same-bucket graphs.
+    """Vmapped device-resident fused pass over B same-bucket graphs.
 
-    Returns ``(B, 16)`` int64 connected + dyadic counts (the type-003
-    closed form is applied per graph by ``CensusPlan.run_batch``).  The
+    Returns ``(B, total_bins)`` int64 raw bins (per-op closed forms are
+    applied per graph by ``Plan.run_batch`` via the op finalizers).  The
     batch is padded up to a power of two with inert entries (``m_nbr = 0``
-    so every chunk lane is masked invalid) to bound the number of batch
-    shapes the jitted unit ever traces; the chunk schedule covers the
-    largest dyad count in the batch, shorter graphs no-op on the excess
-    chunks.  One device→host transfer completes the whole batch.
+    and ``n = 0``, so every chunk lane and every once contribution is
+    masked out) to bound the number of batch shapes the jitted unit ever
+    traces; the chunk schedule covers the largest dyad count in the batch,
+    shorter graphs no-op on the excess chunks.  One device→host transfer
+    completes the whole batch.
     """
     from ..core.graph import stack_graph_arrays
 
     B = len(graphs)
     max_dyads = max(g.n_dyads for g in graphs)
     if max_dyads == 0:
-        return np.zeros((B, 16), dtype=np.int64)
+        return np.zeros((B, plan.layout.total_bins), dtype=np.int64)
     pad = next_pow2(B) - B
     hosts = [plan.padded_arrays_host(g) for g in graphs]
     arrays = stack_graph_arrays(hosts + [hosts[0]] * pad)
@@ -274,7 +319,8 @@ def run_xla_batch(plan, graphs) -> np.ndarray:
     enum = jax.vmap(functools.partial(enumerate_dyads_device,
                                       out_size=plan.dyad_pad))
     du, dv = enum(arrays.nbr_ptr, arrays.nbr_idx, m_nbr)
-    hi = lo = jnp.zeros((B + pad, 16), jnp.int32)
+    hi = lo = jnp.zeros((B + pad, plan.layout.total_bins), jnp.int32)
+    hi, lo = _once_device(plan, hi, lo, arrays, n, batched=True)
     window: collections.deque = collections.deque()
     fn = plan.batch_fn()
     for k in range(-(-max_dyads // plan.chunk)):
@@ -290,32 +336,38 @@ def run_xla_batch(plan, graphs) -> np.ndarray:
 # ----------------------------------------------------------------------------
 
 
-def make_distributed_chunk_fn(meta, config, mesh, stats: dict):
-    """Jitted shard_map'd ``(arrays, n, u, v, valid) -> (16,)`` per chunk.
+def make_distributed_chunk_fn(layout, config, mesh, stats: dict):
+    """Jitted shard_map'd ``(arrays, n, u, v, valid) -> (total_bins,)``
+    per chunk.
 
     Task arrays are ``(n_devices, chunk_L)``; each device scans its local
-    ``(1, chunk_L)`` slice and one psum per mesh axis performs the paper's
-    end-of-run merge (the only communication in the whole job).  The SPMD
-    schedule itself is :func:`repro.core.distributed.make_census_fn_for_mesh`.
+    ``(1, chunk_L)`` slice through the fused multi-op batch kernel and one
+    psum per mesh axis performs the paper's end-of-run merge (the only
+    communication in the whole job).  The SPMD schedule itself is
+    :func:`repro.core.distributed.make_census_fn_for_mesh`, parameterized
+    by the fused kernel.
     """
 
     def on_trace():
         stats["traces"] += 1
 
     return make_census_fn_for_mesh(
-        mesh, K=meta.k, member_iters=meta.member_iters, batch=config.batch,
-        acc_dtype=config.acc_jnp_dtype, on_trace=on_trace)
+        mesh, batch=config.batch, acc_dtype=config.acc_jnp_dtype,
+        on_trace=on_trace, batch_fn=layout.batch_kernel(),
+        n_bins=layout.total_bins)
 
 
-def make_distributed_stream_fn(meta, config, mesh, stats: dict):
-    """Device-resident unit: shard_map census + on-device hi/lo fold.
+def make_distributed_stream_fn(layout, config, mesh, stats: dict):
+    """Device-resident unit: shard_map fused pass + on-device hi/lo fold.
 
     ``(arrays, n, u, v, valid, hi, lo) -> (hi, lo)`` where ``u/v/valid``
-    are ``(n_devices, chunk_L)`` slabs carved from the device-resident task
-    arrays by the driver (an eager device-side ``dynamic_slice`` — no host
-    staging).  The psum'd per-chunk counts never leave the device.
+    are ``(n_devices, chunk_L)`` slabs carved from the device-resident
+    task arrays by the driver (an eager device-side ``dynamic_slice`` —
+    no host staging; per-run ``once`` contributions are folded by the
+    driver before the chunk loop).  The psum'd per-chunk counts never
+    leave the device.
     """
-    inner = make_distributed_chunk_fn(meta, config, mesh, stats)
+    inner = make_distributed_chunk_fn(layout, config, mesh, stats)
 
     @jax.jit
     def stream_fn(arrays, n, u, v, valid, hi, lo):
@@ -335,7 +387,7 @@ def chunk_l(plan) -> int:
 def run_distributed(plan, g: CSRGraph) -> np.ndarray:
     cfg = plan.config
     n_dev = math.prod(plan.mesh.devices.shape)
-    counts = np.zeros(16, dtype=np.int64)
+    counts = np.zeros(plan.layout.total_bins, dtype=np.int64)
     tasks = balance.pack_tasks(g, n_dev, weight_model=cfg.weight_model,
                                strategy=cfg.strategy, pad_multiple=cfg.batch)
     plan.last_task_stats = TaskStats(weights=tasks.weights,
@@ -353,6 +405,7 @@ def run_distributed(plan, g: CSRGraph) -> np.ndarray:
     arrays = plan.padded_arrays(g)
     n = jnp.int32(g.n)
     if not plan.device_path:
+        _once_sync(plan, counts, arrays, n)
         for s in range(0, L + pad, cl):
             c = plan._fn(arrays, n, jnp.asarray(tu[:, s:s + cl]),
                          jnp.asarray(tv[:, s:s + cl]),
@@ -364,7 +417,8 @@ def run_distributed(plan, g: CSRGraph) -> np.ndarray:
     # device path: ONE upload of the packed task arrays, then device-side
     # slab slicing + on-device accumulation; one transfer at the end.
     dtu, dtv, dtval = jnp.asarray(tu), jnp.asarray(tv), jnp.asarray(tval)
-    hi = lo = jnp.zeros(16, jnp.int32)
+    hi = lo = jnp.zeros(plan.layout.total_bins, jnp.int32)
+    hi, lo = _once_device(plan, hi, lo, arrays, n)
     window: collections.deque = collections.deque()
     for s in range(0, L + pad, cl):
         su = jax.lax.dynamic_slice(dtu, (0, s), (n_dev, cl))
@@ -381,32 +435,55 @@ def run_distributed(plan, g: CSRGraph) -> np.ndarray:
 # ----------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("K", "chunk", "block", "interpret"))
-def _pallas_chunk(arrays, n, su, sv, start, end, hi, lo, *, K: int,
-                  chunk: int, block: int, interpret: bool):
-    """Fused device chunk: slice sorted dyads -> gather tiles -> kernel ->
-    fold into the hi/lo accumulator.  One dispatch, zero host staging."""
-    from ..kernels import ops
+def make_pallas_chunk_fn(layout, config):
+    """Fused device chunk unit for the pallas backend.
+
+    ``(arrays, n, su, sv, start, end, hi, lo; K, chunk, block, interpret)``:
+    slice the bucket-sorted dyad list, gather VMEM tiles and run the
+    census tile kernel into the ``triad_census`` accumulator slice, and
+    run every other op's generic batch kernel on the same chunk of dyads
+    — one dispatch, zero host staging (per-run ``once`` contributions are
+    folded by the driver before the chunk loop).  Ops other than the
+    census don't need the tiles, so the one expensive gather is paid
+    exactly once per chunk for the whole op set.
+    """
+    from ..kernels import ops as kops
     from ..kernels.triad_census import SENTINEL, census_tiles_pallas
 
-    pos = start + jnp.arange(chunk, dtype=jnp.int32)
-    valid = pos < end
-    u = jnp.take(su, pos, mode="clip")
-    v = jnp.take(sv, pos, mode="clip")
-    tiles = ops.gather_tiles_device(arrays, u, v, valid, K=K)
-    parts = census_tiles_pallas(
-        jnp.where(valid, u, SENTINEL), jnp.where(valid, v, SENTINEL), n,
-        *(tiles[k] for k in ("out_u", "in_u", "out_v", "in_v",
-                             "nbr_u", "nbr_v")),
-        block=block, interpret=interpret, reduce=False)
+    census_sl = layout.slices.get("triad_census")
+    rest = (layout.batch_kernel(skip=("triad_census",))
+            if layout.has_batch(skip=("triad_census",)) else None)
+    total = layout.total_bins
 
-    def fold(carry, p):
-        h, l = carry
-        return _acc_update(h, l, p), None
+    @functools.partial(jax.jit,
+                       static_argnames=("K", "chunk", "block", "interpret"))
+    def pallas_chunk(arrays, n, su, sv, start, end, hi, lo, *, K: int,
+                     chunk: int, block: int, interpret: bool):
+        pos = start + jnp.arange(chunk, dtype=jnp.int32)
+        valid = pos < end
+        u = jnp.take(su, pos, mode="clip")
+        v = jnp.take(sv, pos, mode="clip")
+        if rest is not None:
+            hi, lo = _acc_update(
+                hi, lo, rest(arrays, n, jnp.where(valid, u, 0),
+                             jnp.where(valid, v, 1), valid))
+        if census_sl is not None:
+            tiles = kops.gather_tiles_device(arrays, u, v, valid, K=K)
+            parts = census_tiles_pallas(
+                jnp.where(valid, u, SENTINEL), jnp.where(valid, v, SENTINEL),
+                n, *(tiles[k] for k in ("out_u", "in_u", "out_v", "in_v",
+                                        "nbr_u", "nbr_v")),
+                block=block, interpret=interpret, reduce=False)
 
-    (hi, lo), _ = jax.lax.scan(fold, (hi, lo), parts)
-    return hi, lo
+            def fold(carry, p):
+                h, l = carry
+                full = jnp.zeros((total,), p.dtype).at[census_sl].set(p)
+                return _acc_update(h, l, full), None
+
+            (hi, lo), _ = jax.lax.scan(fold, (hi, lo), parts)
+        return hi, lo
+
+    return pallas_chunk
 
 
 def _run_pallas_sync(plan, g: CSRGraph) -> np.ndarray:
@@ -414,13 +491,24 @@ def _run_pallas_sync(plan, g: CSRGraph) -> np.ndarray:
     from ..kernels.triad_census import SENTINEL, census_tiles_pallas
 
     cfg = plan.config
+    layout = plan.layout
     interpret = cfg.resolve_interpret()
     block = cfg.resolve_block()
     u, v = canonical_dyads(g)
-    counts = np.zeros(16, dtype=np.int64)
+    counts = np.zeros(layout.total_bins, dtype=np.int64)
     if not len(u):
         return counts
-    in_csr = ops.build_in_csr(g)  # transpose CSR, built once per run
+    census_sl = layout.slices.get("triad_census")
+    rest = (layout.batch_kernel(skip=("triad_census",))
+            if layout.has_batch(skip=("triad_census",)) else None)
+    n_dev = jnp.int32(g.n)
+    if plan.layout.has_once:
+        # padded (bucket-shaped) arrays: the layout-cached jitted once
+        # kernel must see one shape per plan, not one per concrete graph.
+        _once_sync(plan, counts, plan.padded_arrays(g), n_dev)
+    # transpose CSR, built once per run — tile building only, so skipped
+    # when no op uses the census tile kernel.
+    in_csr = ops.build_in_csr(g) if census_sl is not None else None
     deg = np.asarray(g.arrays.nbr_deg)
     out_deg = np.diff(np.asarray(g.arrays.out_ptr))
     need = np.maximum(np.maximum(deg[u], deg[v]),
@@ -440,6 +528,18 @@ def _run_pallas_sync(plan, g: CSRGraph) -> np.ndarray:
         for s in range(0, len(uu_all), chunk):
             uu = uu_all[s:s + chunk]
             vv = vv_all[s:s + chunk]
+            if rest is not None:
+                # generic ops see the exact chunk dyads (no tiles needed);
+                # eager evaluation, one small transfer per chunk — the
+                # sync baseline already pays one per chunk for the census.
+                ru, rv, rva = pad_dyads(uu, vv, chunk)
+                counts += np.asarray(
+                    rest(g.arrays, n_dev, jnp.asarray(ru), jnp.asarray(rv),
+                         jnp.asarray(rva)), dtype=np.int64)
+                plan.stats["host_syncs"] += 1
+            if census_sl is None:
+                plan.stats["chunks"] += 1
+                continue
             pad = (-len(uu)) % block
             if pad:
                 uu = np.concatenate([uu, np.full(pad, SENTINEL, np.int32)])
@@ -455,7 +555,7 @@ def _run_pallas_sync(plan, g: CSRGraph) -> np.ndarray:
                 *(jnp.asarray(tiles[k]) for k in
                   ("out_u", "in_u", "out_v", "in_v", "nbr_u", "nbr_v")),
                 block=block, interpret=interpret)
-            counts += np.asarray(part, dtype=np.int64)
+            counts[census_sl] += np.asarray(part, dtype=np.int64)
             plan.stats["chunks"] += 1
             plan.stats["host_syncs"] += 1
     return counts
@@ -466,7 +566,7 @@ def run_pallas(plan, g: CSRGraph) -> np.ndarray:
         return _run_pallas_sync(plan, g)
     cfg = plan.config
     if g.n_dyads == 0:
-        return np.zeros(16, dtype=np.int64)
+        return np.zeros(plan.layout.total_bins, dtype=np.int64)
     interpret = cfg.resolve_interpret()
     block = cfg.resolve_block()
     chunk = max(block, (plan.chunk // block) * block)
@@ -476,27 +576,41 @@ def run_pallas(plan, g: CSRGraph) -> np.ndarray:
     kmax = max(plan.meta.k, 1)
     ks = tuple(sorted({min(max(int(k), 1), kmax)
                        for k in cfg.buckets} | {kmax}))
-    arrays = plan.padded_arrays(g)  # includes the device-built in-CSR
+    # the tile kernel's whole support system — device-built transpose CSR,
+    # degree-bucket sort, and the bucket-count control fetch — only exists
+    # for the census slice; a plan of generic ops skips all three.
+    census_needed = "triad_census" in plan.layout.slices
+    arrays = plan.padded_arrays(g, with_in_csr=census_needed)
     du, dv = enumerate_dyads_device(arrays.nbr_ptr, arrays.nbr_idx,
                                     jnp.int32(g.m_nbr),
                                     out_size=plan.dyad_pad)
+    n = jnp.int32(g.n)
+    hi = lo = jnp.zeros(plan.layout.total_bins, jnp.int32)
+    hi, lo = _once_device(plan, hi, lo, arrays, n)
+    window: collections.deque = collections.deque()
+    if not census_needed:
+        end = jnp.int32(g.n_dyads)
+        for s in range(0, g.n_dyads, chunk):
+            hi, lo = plan._fn(arrays, n, du, dv, jnp.int32(s), end,
+                              hi, lo, K=kmax, chunk=chunk, block=block,
+                              interpret=interpret)
+            plan.stats["chunks"] += 1
+            _throttle(window, hi, plan.config.pipeline_depth)
+        return _acc_fetch(plan, hi, lo)
     su, sv, counts_dev = sort_dyads_by_bucket(
         arrays.nbr_deg, arrays.out_ptr, du, dv, jnp.int32(g.n_dyads), ks=ks)
     # the one small control transfer: per-bucket dyad counts drive the host
     # chunk schedule (O(1) per run, independent of chunk count).
     bucket_counts = np.asarray(counts_dev)
     plan.stats["host_syncs"] += 1
-    n = jnp.int32(g.n)
-    hi = lo = jnp.zeros(16, jnp.int32)
-    window: collections.deque = collections.deque()
     offset = 0
     for i, K in enumerate(ks):
         c = int(bucket_counts[i])
         end = jnp.int32(offset + c)
         for s in range(offset, offset + c, chunk):
-            hi, lo = _pallas_chunk(arrays, n, su, sv, jnp.int32(s), end,
-                                   hi, lo, K=K, chunk=chunk, block=block,
-                                   interpret=interpret)
+            hi, lo = plan._fn(arrays, n, su, sv, jnp.int32(s), end,
+                              hi, lo, K=K, chunk=chunk, block=block,
+                              interpret=interpret)
             plan.stats["chunks"] += 1
             _throttle(window, hi, plan.config.pipeline_depth)
         offset += c

@@ -1,10 +1,15 @@
-"""Census engine configuration (the single front door's knob surface).
+"""Engine configuration (the single front door's knob surface).
 
-One frozen, hashable dataclass covers every knob the three historical entry
-points exposed separately (``triad_census``, ``triad_census_kernel``,
-``distributed_triad_census``) — backend choice, batch/tile geometry, load
-balancing, accumulator dtype, interpret mode, and the streaming chunk size.
-Hashability matters: the config is half of the plan-cache key.
+One frozen, hashable dataclass — :class:`EngineConfig` — covers every
+execution knob for any set of :class:`~repro.engine.ops.GraphOp`
+analytics: backend choice, batch/tile geometry, load balancing,
+accumulator dtype, interpret mode, and the streaming chunk size.
+:data:`CensusConfig` is the same class under its original census-era
+name, kept so existing call sites (and pickles of the config) keep
+working — aliasing rather than subclassing means wrapper-API and new-API
+plans hash equal and share one plan-cache entry.  Hashability matters:
+the config is one third of the plan-cache key (with the graph metadata
+buckets and the op names).
 """
 from __future__ import annotations
 
@@ -20,8 +25,8 @@ _ACC_DTYPES = {"int32": jnp.int32, "int64": jnp.int64, "float32": jnp.float32}
 
 
 @dataclasses.dataclass(frozen=True)
-class CensusConfig:
-    """Static execution policy for a triad census.
+class EngineConfig:
+    """Static execution policy for a fused graph-analytic pass.
 
     Attributes:
         backend: ``"xla"`` (binary-search scan), ``"pallas"`` (degree-bucketed
@@ -35,7 +40,10 @@ class CensusConfig:
             a power-of-two bucket from the graph's max degree so same-shape
             graphs share one compiled plan.
         buckets: degree-bucket tile widths for the pallas backend (the
-            smallest bucket >= a dyad's degree need wins).
+            smallest bucket >= a dyad's degree need wins).  Validated at
+            construction: non-empty, strictly increasing, all positive —
+            an unsorted or non-positive bucket list used to fail silently
+            deep in tile building.
         strategy / weight_model: task packing for the distributed backend
             (see :mod:`repro.core.balance`).
         acc_dtype: on-device partial-histogram dtype, as a string so the
@@ -91,6 +99,20 @@ class CensusConfig:
             raise ValueError("batch must be >= 1")
         if self.block is not None and self.block < 1:
             raise ValueError("block must be >= 1")
+        # normalize so list-valued buckets still hash (the config is a
+        # cache key), then validate the tile-width ladder up front.
+        object.__setattr__(self, "buckets",
+                           tuple(int(b) for b in self.buckets))
+        if not self.buckets:
+            raise ValueError("buckets must be non-empty")
+        prev = 0
+        for b in self.buckets:
+            if b < 1:
+                raise ValueError(f"buckets must be positive, got {b}")
+            if b <= prev:
+                raise ValueError("buckets must be strictly increasing, "
+                                 f"got {self.buckets}")
+            prev = b
         if self.chunk_dyads is not None and self.chunk_dyads < 1:
             raise ValueError("chunk_dyads must be >= 1")
         if self.pipeline_depth < 1:
@@ -124,3 +146,8 @@ class CensusConfig:
 
     def resolve_block(self) -> int:
         return self.block if self.block is not None else min(self.batch, 32)
+
+
+#: Census-era name for :class:`EngineConfig` — the same class (not a
+#: subclass), so wrapper-API and new-API configs compare and hash equal.
+CensusConfig = EngineConfig

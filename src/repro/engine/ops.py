@@ -1,0 +1,516 @@
+"""Pluggable graph analytics: the GraphOp protocol, registry, and built-ins.
+
+The paper's bottom line is that irregular graph analytics are
+*memory-bound*: streaming the dyad/neighborhood structure through the
+device dominates, while the per-element arithmetic is almost free (Green
+et al., arXiv:1910.03679, make the same point for memory channels).  A
+:class:`GraphOp` therefore declares three small pieces and lets the
+engine amortize the expensive part — the traversal — across every
+analytic that wants it, the way Chin et al. (arXiv:1209.6308) run a whole
+triadic-analysis family over one pass:
+
+  * ``make_batch_fn`` — the per-chunk device kernel: a pure function of a
+    batch of canonical dyads ``(u, v), u < v`` returning ``(bins,)``
+    partial counts (additive, non-negative, < 2**30 per fold so the
+    engine's int32 hi/lo accumulator stays exact);
+  * ``make_once_fn`` — an optional per-run device contribution (for
+    vertex-space analytics such as degree statistics), folded into the
+    on-device accumulator exactly once per run, before the chunk loop;
+  * ``finalize`` — the host-side step from raw int64 bins to the op's
+    result object (closed forms live here).
+
+``repro.engine.compile(graph, ops, EngineConfig())`` fuses any number of
+ops into ONE pass over the streaming dyad pipeline: one traversal, one
+on-device hi/lo accumulator (each op owns a slice — see
+:class:`OpLayout`), one device→host transfer.  Ops that declare the same
+``kernel_key`` share one kernel and one accumulator slice
+(``triadic_profile`` rides the ``triad_census`` bins for free).
+
+Contract corner: chunks only run when the graph has dyads, so on an
+arc-free graph the raw bins arrive all-zero — ``finalize`` must
+reconstruct the correct result from zeros whenever ``g.m == 0``.  Every
+op also ships a NumPy ``reference`` oracle; the parity suite
+(``tests/test_ops.py``) holds each backend to it bit for bit.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.census import (CensusResult, brute_force_census,
+                           make_census_batch_fn, make_member_fn)
+from ..core.graph import CSRGraph, dense_adjacency
+from ..core.triad_table import TRIAD_NAMES
+
+__all__ = ["DegreeStats", "DyadCensus", "GraphOp", "OpLayout",
+           "TriadicProfile", "get_op", "list_ops", "register_op",
+           "resolve_ops", "unregister_op"]
+
+
+def _c2(n: int) -> int:
+    return n * (n - 1) // 2 if n >= 2 else 0
+
+
+def _c3(n: int) -> int:
+    return n * (n - 1) * (n - 2) // 6 if n >= 3 else 0
+
+
+# ----------------------------------------------------------------------------
+# result types
+# ----------------------------------------------------------------------------
+
+
+class DyadCensus(NamedTuple):
+    """MAN dyad census over all C(n, 2) vertex pairs (paper Ch. 2): a pair
+    is **mutual** when both arcs exist, **asymmetric** when exactly one
+    does, **null** otherwise.  ``mutual + asymmetric + null == C(n, 2)``;
+    null pairs come from the closed form (they never enter the dyad
+    stream, which only holds connected pairs)."""
+
+    mutual: int
+    asymmetric: int
+    null: int
+
+
+class DegreeStats(NamedTuple):
+    """In/out-degree summary of the directed graph.
+
+    ``out_hist`` / ``in_hist`` are log2 histograms over the n vertices:
+    bin 0 counts degree-0 vertices, bin b (b >= 1) counts degrees in
+    ``[2**(b-1), 2**b)``, and the top bin absorbs everything larger.
+    ``mean_out == mean_in == m / n`` (every arc is one out- and one
+    in-endpoint), computed on host."""
+
+    out_hist: np.ndarray  # (16,) int64
+    in_hist: np.ndarray   # (16,) int64
+    max_out: int
+    max_in: int
+    mean_out: float
+    mean_in: float
+
+
+class TriadicProfile(NamedTuple):
+    """Transitivity profile derived from the 16 triad-census bins.
+
+    Over the underlying undirected graph (a dyad is "connected" when
+    mutual or asymmetric): ``triangles`` = triads whose three dyads are
+    all connected, ``open_triples`` = wedges not closed into a triangle,
+    ``transitivity`` = 3 * triangles / (3 * triangles + open_triples)
+    (the global clustering coefficient), ``triangle_density`` =
+    triangles / C(n, 3)."""
+
+    triangles: int
+    open_triples: int
+    transitivity: float
+    triangle_density: float
+
+
+# ----------------------------------------------------------------------------
+# the GraphOp protocol
+# ----------------------------------------------------------------------------
+
+
+class GraphOp:
+    """One pluggable analytic: per-chunk kernel + per-run contribution +
+    host finalize.
+
+    Subclass, set ``name`` / ``bins`` (accumulator width), override any of
+    :meth:`make_batch_fn` / :meth:`make_once_fn` / :meth:`finalize` /
+    :meth:`reference`, and :func:`register_op` an instance — every engine
+    entry point (``compile``, ``CensusService`` requests, benchmarks) then
+    accepts the op by name and fuses it into the shared streaming pass.
+    Set ``kernel_key`` to another op's name to share that op's device
+    kernel and accumulator slice (``finalize`` then reads the shared raw
+    bins — how ``triadic_profile`` derives from ``triad_census``)."""
+
+    name: str = ""
+    bins: int = 0
+    kernel_key: Optional[str] = None  # None -> own kernel, keyed by name
+
+    def make_batch_fn(self, meta, config) -> Optional[Callable]:
+        """Build the per-chunk device kernel, or ``None`` if the op has no
+        per-dyad component.
+
+        The kernel maps ``(graph_arrays, n, u, v, valid)`` — a batch of
+        canonical dyads, padded lanes masked by ``valid`` — to ``(bins,)``
+        partial counts in ``config.acc_jnp_dtype``.  It must be additive
+        across batches, order-independent, and keep every per-fold value
+        in ``[0, 2**30)``."""
+        return None
+
+    def make_once_fn(self, meta, config) -> Optional[Callable]:
+        """Build the optional per-run device contribution, or ``None``.
+
+        ``(graph_arrays, n) -> (bins,)`` — folded into the on-device
+        accumulator exactly once per run, before the chunk loop, for
+        vertex-space analytics that need no dyad stream.  Same value
+        constraints as the batch kernel.  Note padded-array conventions: ``out_ptr[-1]``
+        is the true arc count, vertices at index >= ``n`` are padding."""
+        return None
+
+    def finalize(self, raw: np.ndarray, g: CSRGraph) -> Any:
+        """Host-side step from raw int64 bins to the op's result object.
+
+        Closed forms live here (null triads/dyads, means).  Must produce
+        the correct result from all-zero ``raw`` when ``g.m == 0`` —
+        chunks never run on arc-free graphs."""
+        raise NotImplementedError
+
+    def reference(self, g: CSRGraph) -> Any:
+        """NumPy oracle: the op's result computed host-side, for parity
+        tests and docs.  Intended for small graphs only."""
+        raise NotImplementedError
+
+
+# ----------------------------------------------------------------------------
+# built-in ops
+# ----------------------------------------------------------------------------
+
+
+class TriadCensusOp(GraphOp):
+    """The paper's analytic: the 16-type Batagelj–Mrvar triad census.
+
+    Per-chunk kernel is :func:`repro.core.census.make_census_batch_fn`
+    (the one algorithm definition every backend executes); finalize
+    applies the type-003 closed form (paper line 29)."""
+
+    name = "triad_census"
+    bins = 16
+
+    def make_batch_fn(self, meta, config):
+        return make_census_batch_fn(meta.k, meta.member_iters,
+                                    config.acc_jnp_dtype)
+
+    def finalize(self, raw: np.ndarray, g: CSRGraph) -> CensusResult:
+        counts = raw.astype(np.int64).copy()
+        counts[0] = _c3(g.n) - int(counts.sum())
+        return CensusResult(counts=counts)
+
+    def reference(self, g: CSRGraph) -> CensusResult:
+        return brute_force_census(g)
+
+
+class DyadCensusOp(GraphOp):
+    """MAN dyad census (paper Ch. 2): mutual / asymmetric / null pair
+    counts.  Two ``IsEdge`` probes per streamed dyad; null pairs via the
+    C(n, 2) closed form in finalize."""
+
+    name = "dyad_census"
+    bins = 3  # [mutual, asymmetric, 0]; null from the closed form
+
+    def make_batch_fn(self, meta, config):
+        member = make_member_fn(meta.member_iters)
+        acc = config.acc_jnp_dtype
+
+        def dyad_fn(arrays, n, u, v, valid):
+            e_uv = member(arrays.out_ptr, arrays.out_idx, u, v)
+            e_vu = member(arrays.out_ptr, arrays.out_idx, v, u)
+            mut = (e_uv & e_vu & valid).sum(dtype=acc)
+            asym = ((e_uv ^ e_vu) & valid).sum(dtype=acc)
+            return jnp.stack([mut, asym, jnp.zeros((), acc)])
+
+        return dyad_fn
+
+    def finalize(self, raw: np.ndarray, g: CSRGraph) -> DyadCensus:
+        mutual, asymmetric = int(raw[0]), int(raw[1])
+        return DyadCensus(mutual, asymmetric,
+                          _c2(g.n) - mutual - asymmetric)
+
+    def reference(self, g: CSRGraph) -> DyadCensus:
+        a = dense_adjacency(g)
+        mutual = int(np.logical_and(a, a.T).sum()) // 2
+        asymmetric = int(np.logical_and(a, ~a.T).sum())
+        return DyadCensus(mutual, asymmetric,
+                          _c2(g.n) - mutual - asymmetric)
+
+
+class DegreeStatsOp(GraphOp):
+    """In/out-degree histograms + maxima — a pure vertex-space analytic,
+    expressed as a per-run ``once`` contribution (no per-dyad kernel):
+    the fused pass computes it on device for free alongside the dyad
+    stream.  In-degrees come from a device scatter-add over the out-arc
+    column array (no transpose CSR needed)."""
+
+    name = "degree_stats"
+    H = 16  # log2 histogram bins (see DegreeStats)
+    bins = 2 * H + 2  # out_hist, in_hist, max_out, max_in
+
+    def make_once_fn(self, meta, config):
+        H, acc = self.H, config.acc_jnp_dtype
+
+        def once(arrays, n):
+            nb = arrays.out_ptr.shape[0] - 1
+            vmask = jnp.arange(nb, dtype=jnp.int32) < n
+            out_deg = arrays.out_ptr[1:] - arrays.out_ptr[:-1]
+            m = arrays.out_ptr[-1]  # padded rows repeat the last offset
+            pos = jnp.arange(arrays.out_idx.shape[0], dtype=jnp.int32)
+            in_deg = (jnp.zeros(nb, jnp.int32)
+                      .at[arrays.out_idx].add(jnp.where(pos < m, 1, 0)))
+            live = vmask.astype(acc)
+            shifts = jnp.arange(H - 1, dtype=jnp.int32)
+
+            def hist(deg):
+                # bin = min(bit_length(deg), H-1); 0 stays in bin 0.
+                b = jnp.sum((deg[:, None] >> shifts[None, :]) > 0, axis=1)
+                return jnp.zeros(H, acc).at[b].add(live)
+
+            def mx(deg):
+                return jnp.max(jnp.where(vmask, deg, 0)).astype(acc)
+
+            return jnp.concatenate([hist(out_deg), hist(in_deg),
+                                    mx(out_deg)[None], mx(in_deg)[None]])
+
+        return once
+
+    def finalize(self, raw: np.ndarray, g: CSRGraph) -> DegreeStats:
+        H = self.H
+        if g.m == 0:  # no chunks ran: all n vertices sit in bin 0
+            out_hist = np.zeros(H, np.int64)
+            out_hist[0] = g.n
+            in_hist = out_hist.copy()
+            mx_out = mx_in = 0
+        else:
+            raw = raw.astype(np.int64)
+            out_hist, in_hist = raw[:H].copy(), raw[H:2 * H].copy()
+            mx_out, mx_in = int(raw[2 * H]), int(raw[2 * H + 1])
+        mean = g.m / g.n if g.n else 0.0
+        return DegreeStats(out_hist, in_hist, mx_out, mx_in, mean, mean)
+
+    def reference(self, g: CSRGraph) -> DegreeStats:
+        H = self.H
+        out_ptr = np.asarray(g.arrays.out_ptr)[: g.n + 1]
+        out_deg = np.diff(out_ptr).astype(np.int64)
+        idx = np.asarray(g.arrays.out_idx)[: g.m]
+        in_deg = np.bincount(idx, minlength=g.n)[: g.n].astype(np.int64)
+
+        def hist(d):
+            b = np.where(d == 0, 0, np.minimum(
+                np.floor(np.log2(np.maximum(d, 1))).astype(np.int64) + 1,
+                H - 1))
+            return np.bincount(b, minlength=H)[:H].astype(np.int64)
+
+        mean = g.m / g.n if g.n else 0.0
+        return DegreeStats(hist(out_deg), hist(in_deg),
+                           int(out_deg.max(initial=0)),
+                           int(in_deg.max(initial=0)), mean, mean)
+
+
+#: connected (mutual + asymmetric) dyads per triad type, from the MAN name.
+_CONNECTED = tuple(int(nm[0]) + int(nm[1]) for nm in TRIAD_NAMES)
+
+
+class TriadicProfileOp(GraphOp):
+    """Transitivity + triangle statistics, derived from the census bins.
+
+    Declares ``kernel_key = "triad_census"``: it runs no kernel of its
+    own — when fused with ``triad_census`` the two ops share one kernel
+    and one accumulator slice, and alone it reuses the census kernel.
+    Finalize weighs each triad type by its connected-dyad count (the
+    MAN-name digit sum): 3 connected dyads = a triangle (3 closed
+    wedges), 2 = one open wedge."""
+
+    name = "triadic_profile"
+    kernel_key = "triad_census"
+    bins = 16
+
+    def make_batch_fn(self, meta, config):
+        return make_census_batch_fn(meta.k, meta.member_iters,
+                                    config.acc_jnp_dtype)
+
+    def _profile(self, counts, n: int) -> TriadicProfile:
+        tri = sum(int(c) for c, k in zip(counts, _CONNECTED) if k == 3)
+        wedges = sum(int(c) * (3 if k == 3 else 1)
+                     for c, k in zip(counts, _CONNECTED) if k >= 2)
+        transitivity = 3.0 * tri / wedges if wedges else 0.0
+        density = tri / _c3(n) if n >= 3 else 0.0
+        return TriadicProfile(tri, wedges - 3 * tri, transitivity, density)
+
+    def finalize(self, raw: np.ndarray, g: CSRGraph) -> TriadicProfile:
+        # raw bin 0 ("003") is always 0 on the kernel path and its
+        # connected weight is 0 anyway, so no closed form is needed.
+        return self._profile(raw, g.n)
+
+    def reference(self, g: CSRGraph) -> TriadicProfile:
+        return self._profile(brute_force_census(g).counts, g.n)
+
+
+# ----------------------------------------------------------------------------
+# registry
+# ----------------------------------------------------------------------------
+
+_REGISTRY: "dict[str, GraphOp]" = {}
+
+
+def register_op(op: GraphOp, *, overwrite: bool = False) -> GraphOp:
+    """Register a :class:`GraphOp` instance under ``op.name``.
+
+    Registered ops are addressable by name everywhere an ``ops`` argument
+    is accepted (``repro.engine.compile``, ``CensusService.submit``,
+    ``benchmarks/run.py --ops``).  Returns ``op`` so the call can be used
+    as a statement-level decorator on an instance."""
+    if not op.name:
+        raise ValueError("GraphOp needs a non-empty name")
+    if op.bins < 1:
+        raise ValueError(f"GraphOp {op.name!r} needs bins >= 1")
+    if op.name in _REGISTRY and not overwrite:
+        raise ValueError(f"GraphOp {op.name!r} is already registered "
+                         "(pass overwrite=True to replace)")
+    _REGISTRY[op.name] = op
+    return op
+
+
+def unregister_op(name: str) -> None:
+    """Remove a registered op (no-op if absent).  Plans already compiled
+    against the op keep working; only name lookup is affected."""
+    _REGISTRY.pop(name, None)
+
+
+def get_op(name: str) -> GraphOp:
+    """Look up a registered :class:`GraphOp` by name (KeyError with the
+    registered-name list otherwise)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown GraphOp {name!r}; registered: "
+                       f"{list_ops()}") from None
+
+
+def list_ops() -> "tuple[str, ...]":
+    """Names of every registered :class:`GraphOp`, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_ops(ops) -> "tuple[GraphOp, ...]":
+    """Normalize an ops spec — a name, a :class:`GraphOp` instance, or a
+    sequence of either — into a tuple of op instances (order preserved;
+    duplicates rejected)."""
+    if isinstance(ops, (str, GraphOp)):
+        ops = (ops,)
+    out = tuple(get_op(o) if isinstance(o, str) else o for o in ops)
+    if not out:
+        raise ValueError("ops must name at least one GraphOp")
+    for op in out:
+        if not isinstance(op, GraphOp):
+            raise TypeError(f"ops entries must be GraphOp names or "
+                            f"instances, got {op!r}")
+    names = [op.name for op in out]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate ops in {names}")
+    return out
+
+
+for _op in (TriadCensusOp(), DyadCensusOp(), DegreeStatsOp(),
+            TriadicProfileOp()):
+    register_op(_op)
+
+
+# ----------------------------------------------------------------------------
+# fused accumulator layout
+# ----------------------------------------------------------------------------
+
+
+class OpLayout:
+    """Accumulator layout + fused kernels for one plan's ops.
+
+    Ops are deduplicated by ``kernel_key`` (first op bearing a key owns
+    its kernel); each unique kernel gets a contiguous slice of the fused
+    accumulator.  :meth:`batch_kernel` / :meth:`once_kernel` concatenate
+    the per-kernel contributions into one ``(total_bins,)`` vector — the
+    quantity the engine's hi/lo accumulator folds per batch — and
+    :meth:`finalize` hands each op its slice of the raw int64 bins."""
+
+    def __init__(self, ops, meta, config):
+        self.ops = tuple(ops)
+        owners: dict = {}
+        self.keys: list = []
+        for op in self.ops:
+            key = op.kernel_key or op.name
+            if key not in owners:
+                owners[key] = op
+                self.keys.append(key)
+            elif op.name == key:
+                owners[key] = op  # a key's namesake always owns its kernel
+        for op in self.ops:
+            key = op.kernel_key or op.name
+            if op.bins != owners[key].bins:
+                raise ValueError(
+                    f"op {op.name!r} shares kernel_key {key!r} but declares "
+                    f"bins={op.bins} != {owners[key].bins} (the kernel "
+                    f"owner's width) — sharers read the owner's slice and "
+                    f"must agree on its size")
+        self.bins = tuple(owners[k].bins for k in self.keys)
+        edges = np.concatenate([[0], np.cumsum(self.bins)])
+        self.slices = {k: slice(int(edges[i]), int(edges[i + 1]))
+                       for i, k in enumerate(self.keys)}
+        self.total_bins = int(edges[-1])
+        self._acc = config.acc_jnp_dtype
+        self._batch_fns = [owners[k].make_batch_fn(meta, config)
+                           for k in self.keys]
+        self._once_fns = [owners[k].make_once_fn(meta, config)
+                          for k in self.keys]
+        self.has_once = any(f is not None for f in self._once_fns)
+        self._once_jit = None
+        self._once_batch_jit = None
+
+    def has_batch(self, *, skip=()) -> bool:
+        """True if any kernel outside ``skip`` has a per-dyad component."""
+        return any(f is not None for k, f in zip(self.keys, self._batch_fns)
+                   if k not in skip)
+
+    def batch_kernel(self, *, skip=()):
+        """Fused per-batch kernel ``(arrays, n, u, v, valid) ->
+        (total_bins,)``.  Keys in ``skip`` contribute zeros — the pallas
+        backend skips ``"triad_census"`` here and fills that slice with
+        its tile kernel instead."""
+        fns = [None if k in skip else f
+               for k, f in zip(self.keys, self._batch_fns)]
+        bins, acc = self.bins, self._acc
+
+        def fused(arrays, n, u, v, valid):
+            parts = [f(arrays, n, u, v, valid) if f is not None
+                     else jnp.zeros((b,), acc) for f, b in zip(fns, bins)]
+            return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+        return fused
+
+    def once_kernel(self):
+        """Fused per-run kernel ``(arrays, n) -> (total_bins,)``, or
+        ``None`` when no op declares a once contribution."""
+        if not self.has_once:
+            return None
+        fns, bins, acc = self._once_fns, self.bins, self._acc
+
+        def fused(arrays, n):
+            parts = [f(arrays, n) if f is not None
+                     else jnp.zeros((b,), acc) for f, b in zip(fns, bins)]
+            return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+        return fused
+
+    def once_jitted(self):
+        """Jitted :meth:`once_kernel`, cached on the layout — the drivers
+        fold it into the accumulator once per run, before the chunk loop
+        (chunk units carry no once logic, so its vertex-space work is
+        never re-dispatched per chunk)."""
+        if self._once_jit is None and self.has_once:
+            self._once_jit = jax.jit(self.once_kernel())
+        return self._once_jit
+
+    def once_batch_jitted(self):
+        """Vmapped + jitted :meth:`once_kernel` for the batched driver
+        (leading batch axis over arrays and ``n``; padding lanes have
+        ``n = 0`` so every per-vertex contribution masks to zero)."""
+        if self._once_batch_jit is None and self.has_once:
+            self._once_batch_jit = jax.jit(jax.vmap(self.once_kernel()))
+        return self._once_batch_jit
+
+    def finalize(self, raw, g: CSRGraph) -> dict:
+        """Per-op results from the fused raw bins: ``{op.name: result}``
+        in the plan's op order."""
+        raw = np.asarray(raw, dtype=np.int64)
+        return {op.name:
+                op.finalize(raw[self.slices[op.kernel_key or op.name]], g)
+                for op in self.ops}

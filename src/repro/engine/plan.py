@@ -1,19 +1,26 @@
-"""Compiled census plans + the plan cache (the serving hot path).
+"""Compiled multi-analytic plans + the plan cache (the serving hot path).
 
-``compile_census(graph_meta, config) -> CensusPlan`` is the single public
-entry point for the Triad Census.  A :class:`CensusPlan` owns everything the
-three historical paths each re-derived per call — canonical-dyad
-enumeration, padding, tile building, degree bucketing, task sharding, the
-scan/partial-histogram schedule, and the host-side int64 merge with the
-type-003 closed form — plus two things none of them had:
+``compile(graph_meta, ops, config) -> Plan`` is the engine's front door: a
+:class:`Plan` owns everything the historical paths re-derived per call —
+canonical-dyad enumeration, padding, tile building, degree bucketing, task
+sharding, the scan/partial-histogram schedule — and executes **any number
+of** :class:`~repro.engine.ops.GraphOp` analytics **in one fused pass**
+over the streaming dyad pipeline: one traversal, one on-device hi/lo
+accumulator (each op owns a slice), one device→host transfer, per-op
+results.  Two properties carry over from the census-only engine:
 
   * a **plan cache** keyed on static graph metadata buckets (n, max-degree
-    and arc counts rounded to powers of two) + the config, so repeated
-    censuses on same-shape graphs reuse one compiled plan and hit zero
-    retraces (bounded LRU — see :func:`set_plan_cache_capacity`), and
+    and arc counts rounded to powers of two) + op names + config, so
+    repeated analytics on same-shape graphs reuse one compiled plan and
+    hit zero retraces (bounded LRU — see :func:`set_plan_cache_capacity`),
   * **chunked streaming execution**: the compiled unit processes a
     fixed-shape chunk of dyads, so its trace is independent of the dyad
     count and graphs whose full dyad tiles exceed device memory still run.
+
+``compile_census`` / :class:`CensusPlan` are the original census-only API,
+now thin views over the same plans: a census wrapper and a new-API plan
+for the same (bucket, config, ops) share ONE cache entry and one set of
+compiled units — no double compiles.
 """
 from __future__ import annotations
 
@@ -31,19 +38,17 @@ from ..core.census import CensusResult
 from ..core.graph import CSRGraph, GraphArrays
 from ..core.graph import next_pow2 as _next_pow2
 from . import backends
-from .config import CensusConfig
+from .config import EngineConfig
+from .ops import OpLayout, resolve_ops
 
-__all__ = ["GraphMeta", "CensusPlan", "compile_census", "clear_plan_cache",
-           "plan_cache_stats", "set_plan_cache_capacity"]
-
-
-def _c3(n: int) -> int:
-    return n * (n - 1) * (n - 2) // 6 if n >= 3 else 0
+__all__ = ["CensusPlan", "GraphMeta", "Plan", "compile", "compile_census",
+           "clear_plan_cache", "plan_cache_stats", "set_plan_cache_capacity"]
 
 
 @dataclasses.dataclass(frozen=True)
 class GraphMeta:
-    """Static, bucketized graph shape — one half of the plan-cache key.
+    """Static, bucketized graph shape — the graph half of the plan-cache
+    key.
 
     All fields are rounded up to powers of two so graphs of similar shape
     map to the same plan (and therefore the same compiled trace).
@@ -78,21 +83,27 @@ def _pad_to(a: np.ndarray, size: int, fill) -> np.ndarray:
     return out
 
 
-class CensusPlan:
-    """A compiled, reusable census execution plan.
+class Plan:
+    """A compiled, reusable fused-analytic execution plan.
 
-    Create via :func:`compile_census`; run with :meth:`run`.  One plan
-    serves every graph whose :class:`GraphMeta` matches — arrays are padded
-    to the metadata buckets before entering the device, so no input shape
-    (and hence no trace) depends on the concrete graph.
+    Create via :func:`compile`; run with :meth:`run` (returns ``{op_name:
+    result}``).  One plan serves every graph whose :class:`GraphMeta`
+    matches — arrays are padded to the metadata buckets before entering
+    the device, so no input shape (and hence no trace) depends on the
+    concrete graph.  However many ops the plan carries, execution is one
+    traversal of the dyad stream and one device→host transfer
+    (``stats["host_syncs"]`` is identical to a single-op run).
     """
 
-    def __init__(self, meta: GraphMeta, config: CensusConfig, backend: str,
-                 mesh=None):
+    def __init__(self, meta: GraphMeta, ops, config: EngineConfig,
+                 backend: str, mesh=None):
         self.meta = meta
+        self.ops = tuple(ops)
+        self.op_names = tuple(op.name for op in self.ops)
         self.config = config
         self.backend = backend
         self.mesh = mesh
+        self.layout = OpLayout(self.ops, meta, config)
         # streaming chunk, capped by the graph's dyad-count bucket
         # (m_nbr_bucket/2 >= n_dyads) so small graphs don't pad to a full
         # default chunk; both terms are static, so shapes stay cache-stable.
@@ -108,24 +119,27 @@ class CensusPlan:
         self.stats = {"traces": 0, "runs": 0, "chunks": 0, "host_syncs": 0,
                       "batch_runs": 0, "batch_graphs": 0}
         self._batch_fn = None  # lazily-built vmapped unit (xla device path)
+        self._census_view = None  # memoized CensusPlan compat wrapper
         # distributed: per-shard load summary of the most recent run
         # (a backends.TaskStats — plans are cached with a bounded LRU, so
         # only the (n_shards,) weights are retained, never the task arrays).
         self.last_task_stats = None
         if backend == "xla":
             self._fn = (
-                backends.make_xla_stream_fn(meta, config, self.stats,
+                backends.make_xla_stream_fn(self.layout, config, self.stats,
                                             self.chunk)
                 if self.device_path
-                else backends.make_xla_chunk_fn(meta, config, self.stats))
+                else backends.make_xla_chunk_fn(self.layout, config,
+                                                self.stats))
         elif backend == "distributed":
             if mesh is None:
                 raise ValueError("distributed backend needs a mesh")
             make = (backends.make_distributed_stream_fn if self.device_path
                     else backends.make_distributed_chunk_fn)
-            self._fn = make(meta, config, mesh, self.stats)
+            self._fn = make(self.layout, config, mesh, self.stats)
         elif backend == "pallas":
-            self._fn = None  # pallas_call manages its own per-shape cache
+            # fused chunk unit; pallas_call manages its own per-shape cache
+            self._fn = backends.make_pallas_chunk_fn(self.layout, config)
         else:
             raise ValueError(f"unknown backend {backend!r}")
 
@@ -136,11 +150,12 @@ class CensusPlan:
         if g.max_deg > m.k:
             raise ValueError(
                 f"graph max_deg={g.max_deg} exceeds plan tile width k={m.k}; "
-                f"recompile with compile_census(graph, config)")
+                f"recompile via repro.engine.compile(graph, ops, config)")
         if g.n > m.n_bucket or g.m > m.m_out_bucket or g.m_nbr > m.m_nbr_bucket:
             raise ValueError(
                 f"graph (n={g.n}, m={g.m}, m_nbr={g.m_nbr}) exceeds plan "
-                f"buckets {m}; recompile with compile_census(graph, config)")
+                f"buckets {m}; recompile via repro.engine.compile(graph, "
+                f"ops, config)")
 
     def padded_arrays_host(self, g: CSRGraph) -> GraphArrays:
         """Bucket-padded arrays as host numpy (no device transfer).
@@ -173,14 +188,16 @@ class CensusPlan:
         fields, built **on device** by
         :func:`repro.kernels.ops.build_in_csr_device` — once per run, no
         host round trip.  Default: only for the device-resident pallas
-        path, the one consumer of in-arc tiles.
+        path when an op actually uses the census tile kernel, the one
+        consumer of in-arc tiles.
         """
         host = self.padded_arrays_host(g)
         arrays = GraphArrays(
             **{f: (None if v is None else jnp.asarray(v))
                for f, v in zip(GraphArrays._fields, host)})
         if with_in_csr is None:
-            with_in_csr = self.backend == "pallas" and self.device_path
+            with_in_csr = (self.backend == "pallas" and self.device_path
+                           and "triad_census" in self.layout.slices)
         if with_in_csr:
             from ..kernels import ops
             in_ptr, in_idx = ops.build_in_csr_device(arrays.out_ptr,
@@ -190,36 +207,35 @@ class CensusPlan:
 
     # -- execution -----------------------------------------------------------
 
-    def run(self, g: CSRGraph) -> CensusResult:
-        """Execute the census; returns int64 counts for all 16 triad types.
+    def run(self, g: CSRGraph) -> dict:
+        """Execute every op in one fused pass; returns ``{op_name: result}``.
 
+        One traversal of the dyad stream, one on-device accumulator, one
+        device→host sync — the same schedule a single-op plan runs.
         Semantically the ``B = 1`` case of :meth:`run_batch`; it executes
         through the single-graph (un-vmapped) units, which produce
-        bit-identical counts — the census is pure integer arithmetic.
+        bit-identical raw bins — every op is pure integer arithmetic.
         """
         self._check(g)
         self.stats["runs"] += 1
-        return self._run_one(g)
+        return self.layout.finalize(self._run_raw(g), g)
 
-    def _run_one(self, g: CSRGraph) -> CensusResult:
-        """Backend dispatch + the type-003 closed form (stats pre-counted)."""
+    def _run_raw(self, g: CSRGraph) -> np.ndarray:
+        """Backend dispatch: the fused raw int64 bins (no finalize)."""
         runner = {"xla": backends.run_xla,
                   "distributed": backends.run_distributed,
                   "pallas": backends.run_pallas}[self.backend]
-        counts = runner(self, g)
-        # the paper's line 29: null triads via the closed form, on host.
-        counts[0] = _c3(g.n) - int(counts.sum())
-        return CensusResult(counts=counts)
+        return runner(self, g)
 
-    def run_batch(self, graphs) -> "list[CensusResult]":
-        """Execute the census on B same-bucket graphs as one batch.
+    def run_batch(self, graphs) -> "list[dict]":
+        """Execute the fused pass on B same-bucket graphs as one batch.
 
         Every graph must pass this plan's admission check (same metadata
         buckets — the :class:`GraphMeta` grouping a
         :class:`repro.serve.CensusService` performs).  On the xla
         device-resident path the whole batch runs through one vmapped
         fixed-shape unit — a leading batch axis over the padded graph
-        arrays, the device dyad lists and the 16-bin hi/lo accumulator —
+        arrays, the device dyad lists and the fused hi/lo accumulator —
         so B requests cost one chunk schedule of dispatches and **one**
         device→host transfer instead of B of each.  Results are
         bit-identical to B sequential :meth:`run` calls (integer
@@ -230,7 +246,7 @@ class CensusPlan:
         executes member-wise through the single-graph path — same results,
         amortizing only the plan, not the dispatch.
 
-        Returns one :class:`CensusResult` per graph, in input order.
+        Returns one ``{op_name: result}`` dict per graph, in input order.
         """
         graphs = list(graphs)
         if not graphs:
@@ -241,14 +257,10 @@ class CensusPlan:
         self.stats["batch_runs"] += 1
         self.stats["batch_graphs"] += len(graphs)
         if self.backend == "xla" and self.device_path:
-            counts = backends.run_xla_batch(self, graphs)
-            out = []
-            for g, c in zip(graphs, counts):
-                c = c.copy()
-                c[0] = _c3(g.n) - int(c.sum())
-                out.append(CensusResult(counts=c))
-            return out
-        return [self._run_one(g) for g in graphs]
+            raws = backends.run_xla_batch(self, graphs)
+            return [self.layout.finalize(raw, g)
+                    for raw, g in zip(raws, graphs)]
+        return [self.layout.finalize(self._run_raw(g), g) for g in graphs]
 
     def batch_fn(self):
         """The vmapped batched unit (xla device path), built lazily.
@@ -258,7 +270,7 @@ class CensusPlan:
         """
         if self._batch_fn is None:
             self._batch_fn = backends.make_xla_stream_batch_fn(
-                self.meta, self.config, self.stats, self.chunk)
+                self.layout, self.config, self.stats, self.chunk)
         return self._batch_fn
 
     def aot_lower(self, g: CSRGraph):
@@ -267,7 +279,7 @@ class CensusPlan:
         For dry-run/roofline analysis (memory_analysis, cost_analysis)
         without executing.  Only xla/distributed expose a jitted unit.
         """
-        if self._fn is None:
+        if self.backend == "pallas":
             raise NotImplementedError("pallas backend has no jitted unit")
         m = self.meta
         arrays = GraphArrays(
@@ -288,12 +300,87 @@ class CensusPlan:
         if not self.device_path:
             return self._fn.lower(arrays, n, ints, ints, bools)
         scalar = jax.ShapeDtypeStruct((), jnp.int32)
-        acc = jax.ShapeDtypeStruct((16,), jnp.int32)
+        acc = jax.ShapeDtypeStruct((self.layout.total_bins,), jnp.int32)
         if self.backend == "distributed":
             return self._fn.lower(arrays, n, ints, ints, bools, acc, acc)
         dyads = jax.ShapeDtypeStruct((self.dyad_pad,), jnp.int32)
         return self._fn.lower(arrays, n, dyads, dyads, scalar, scalar,
                               acc, acc)
+
+    # -- compat --------------------------------------------------------------
+
+    def census_view(self) -> "CensusPlan":
+        """The census-only compat view over this plan (memoized — repeat
+        calls return the identical :class:`CensusPlan` object, which is
+        what keeps ``compile_census``'s is-identity cache semantics)."""
+        if "triad_census" not in self.op_names:
+            raise ValueError(f"plan ops {self.op_names} do not include "
+                             "'triad_census'")
+        if self._census_view is None:
+            self._census_view = CensusPlan(self)
+        return self._census_view
+
+
+class CensusPlan:
+    """Triad-census view of a generalized :class:`Plan` (the original
+    census-only API, unchanged for callers).
+
+    Created by ``compile_census``; every attribute (``stats``, ``meta``,
+    ``config``, ``chunk``, ``device_path``, ...) delegates to the
+    underlying multi-op plan — the SAME cached object a new-API
+    ``compile(graph, ("triad_census",), config)`` returns — and
+    :meth:`run` / :meth:`run_batch` unwrap the fused result dict to bare
+    :class:`~repro.core.census.CensusResult` values, bit-identical to the
+    pre-GraphOp engine.
+    """
+
+    def __init__(self, plan: Plan):
+        self._plan = plan
+
+    def __getattr__(self, name):
+        return getattr(self._plan, name)
+
+    def run(self, g: CSRGraph) -> CensusResult:
+        """Execute the census; returns int64 counts for all 16 triad types
+        (including the type-003 closed form).  Semantically the ``B = 1``
+        case of :meth:`run_batch` — see :meth:`Plan.run`.
+        """
+        return self._plan.run(g)["triad_census"]
+
+    def run_batch(self, graphs) -> "list[CensusResult]":
+        """Execute the census on B same-bucket graphs as one batch.
+
+        The census-only unwrapping of :meth:`Plan.run_batch` (see there
+        for batching semantics): one vmapped dispatch schedule and one
+        device→host transfer on the xla device path, member-wise fallback
+        elsewhere, results bit-identical to sequential :meth:`run` calls.
+        Returns one :class:`~repro.core.census.CensusResult` per graph,
+        in input order.
+        """
+        return [r["triad_census"] for r in self._plan.run_batch(graphs)]
+
+    def padded_arrays(self, g: CSRGraph, *,
+                      with_in_csr: Optional[bool] = None) -> GraphArrays:
+        """Device arrays padded to the metadata buckets (shape-stable);
+        see :meth:`Plan.padded_arrays` for padding + transpose-CSR
+        semantics."""
+        return self._plan.padded_arrays(g, with_in_csr=with_in_csr)
+
+    def padded_arrays_host(self, g: CSRGraph) -> GraphArrays:
+        """Bucket-padded arrays as host numpy (no device transfer); see
+        :meth:`Plan.padded_arrays_host` for why the batched path wants
+        host-side padding."""
+        return self._plan.padded_arrays_host(g)
+
+    def aot_lower(self, g: CSRGraph):
+        """Lower the compiled chunk unit at this plan's static shapes for
+        dry-run/roofline analysis; see :meth:`Plan.aot_lower`."""
+        return self._plan.aot_lower(g)
+
+    def batch_fn(self):
+        """The vmapped batched unit (xla device path), built lazily on the
+        underlying plan; see :meth:`Plan.batch_fn`."""
+        return self._plan.batch_fn()
 
 
 # ----------------------------------------------------------------------------
@@ -332,17 +419,23 @@ def _default_mesh(n_dev: int):
     return jax.make_mesh((n_dev,), ("data",))
 
 
-def compile_census(graph_meta, config: Optional[CensusConfig] = None, *,
-                   mesh=None) -> CensusPlan:
-    """Build (or fetch from cache) the census plan for this graph shape.
+def compile(graph_meta, ops=("triad_census",),
+            config: Optional[EngineConfig] = None, *, mesh=None) -> Plan:
+    """Build (or fetch from cache) the fused plan for this graph shape +
+    op set.
 
     ``graph_meta`` is a :class:`CSRGraph` (metadata extracted and
-    bucketized) or an explicit :class:`GraphMeta`.  Plans are cached on
-    (metadata buckets, config, resolved backend, mesh): a second census on
-    a same-shape graph returns the identical plan object and re-uses its
-    compiled trace.
+    bucketized) or an explicit :class:`GraphMeta`.  ``ops`` is a GraphOp
+    name, a :class:`~repro.engine.ops.GraphOp` instance, or a sequence of
+    either (see :func:`repro.engine.ops.list_ops`); order fixes the
+    result-dict order.  Plans are cached on (metadata buckets, op names,
+    config, resolved backend, mesh): a second compile for a same-shape
+    graph returns the identical plan object and re-uses its compiled
+    trace — and a census-only ``compile_census`` call shares the same
+    entry as ``compile(graph, ("triad_census",), config)``.
     """
-    config = config or CensusConfig()
+    config = config or EngineConfig()
+    op_objs = resolve_ops(ops)
     meta = (graph_meta if isinstance(graph_meta, GraphMeta)
             else GraphMeta.from_graph(graph_meta, k=config.k))
     backend = config.resolve_backend()
@@ -354,17 +447,36 @@ def compile_census(graph_meta, config: Optional[CensusConfig] = None, *,
         device_accum=config.resolve_device_accum())
     if backend == "distributed" and mesh is None:
         mesh = _default_mesh(len(jax.devices()))
-    key = (meta, config, mesh)
+    # key on the op *instances* (identity), not their names: re-registering
+    # an op (overwrite=True) or passing an unregistered instance whose name
+    # collides with a built-in must compile fresh, never reuse a plan built
+    # against a different implementation.
+    key = (meta, op_objs, config, mesh)
     plan = _PLAN_CACHE.get(key)
     if plan is not None:
         _CACHE_STATS["hits"] += 1
         _PLAN_CACHE.move_to_end(key)  # LRU freshness
         return plan
     _CACHE_STATS["misses"] += 1
-    plan = CensusPlan(meta, config, backend, mesh)
+    plan = Plan(meta, op_objs, config, backend, mesh)
     _PLAN_CACHE[key] = plan
     _evict_to_capacity()
     return plan
+
+
+def compile_census(graph_meta, config: Optional[EngineConfig] = None, *,
+                   mesh=None) -> CensusPlan:
+    """Build (or fetch from cache) the census plan for this graph shape.
+
+    The original front door, now a thin wrapper: delegates to
+    ``compile(graph_meta, ("triad_census",), config)`` — so census-only
+    wrapper plans and new-API plans for the same (bucket, config, ops)
+    share ONE cache entry and compile once — and returns the plan's
+    memoized census view (repeat calls on a warm cache return the
+    identical :class:`CensusPlan` object).
+    """
+    return compile(graph_meta, ("triad_census",), config,
+                   mesh=mesh).census_view()
 
 
 def clear_plan_cache() -> None:
@@ -383,15 +495,16 @@ def plan_cache_stats() -> dict:
     Returns ``hits`` / ``misses`` / ``evictions`` / ``size`` /
     ``capacity`` plus ``entries``: one dict per cached plan, in LRU order
     (oldest first), holding the bucketized ``meta`` fields, ``backend``,
-    ``device_path``, the resolved streaming ``chunk``, and the plan's
-    live execution counters (``runs``, ``batch_runs``, ``batch_graphs``,
-    ``traces``, ``chunks``, ``host_syncs``).  This is the introspection
-    surface :class:`repro.serve.CensusService` reports per-bucket stats
-    from.
+    ``device_path``, the plan's ``ops`` (op-name tuple), the resolved
+    streaming ``chunk``, and the plan's live execution counters
+    (``runs``, ``batch_runs``, ``batch_graphs``, ``traces``, ``chunks``,
+    ``host_syncs``).  This is the introspection surface
+    :class:`repro.serve.CensusService` reports per-bucket stats from.
     """
     entries = [
         dict(meta=dataclasses.asdict(p.meta), backend=p.backend,
-             device_path=p.device_path, chunk=p.chunk, **p.stats)
+             device_path=p.device_path, chunk=p.chunk, ops=p.op_names,
+             **p.stats)
         for p in _PLAN_CACHE.values()
     ]
     return {**_CACHE_STATS, "size": len(_PLAN_CACHE),

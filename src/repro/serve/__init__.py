@@ -1,8 +1,10 @@
-"""Serving layers: LM token decode + the batched multi-graph census service.
+"""Serving layers: LM token decode + the batched multi-analytic graph
+service.
 
-``CensusService`` (see :mod:`repro.serve.census_service`) is the census
-fleet front door: requests are grouped by plan-cache bucket and executed
-as vmapped fixed-shape batches through ``CensusPlan.run_batch``.
+``CensusService`` (see :mod:`repro.serve.census_service`) is the graph
+fleet front door: requests — each naming the GraphOp analytics it wants —
+are grouped by (plan-cache bucket, ops) and executed as vmapped
+fixed-shape fused batches through ``Plan.run_batch``.
 """
 from .census_service import CensusCompletion, CensusService, ServiceConfig
 from .decode import make_prefill_step, make_serve_step

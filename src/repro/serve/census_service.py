@@ -1,15 +1,16 @@
-"""Batched multi-graph census serving (the fleet front door).
+"""Batched multi-graph, multi-analytic serving (the fleet front door).
 
 The engine's plan cache already amortizes *compilation* across same-shape
 graphs; this layer amortizes *dispatch*.  A :class:`CensusService` accepts
-a stream of :class:`~repro.core.graph.CSRGraph` requests, groups them by
-their :class:`~repro.engine.GraphMeta` bucket key (the plan-cache key's
-graph half), and executes each same-bucket group as ONE vmapped
-fixed-shape batch through ``CensusPlan.run_batch`` — B small censuses for
-one chunk schedule of dispatches and one device→host transfer.  That is
-the workload shape of triadic analysis over graph *collections* (Chin et
-al., "Scalable Triadic Analysis of Large-Scale Graphs"): many small
-same-shape graphs, not one giant kernel launch.
+a stream of :class:`~repro.core.graph.CSRGraph` requests — each optionally
+naming the :class:`~repro.engine.GraphOp` analytics it wants — groups them
+by (:class:`~repro.engine.GraphMeta` bucket, ops) key, and executes each
+group as ONE vmapped fixed-shape batch through ``Plan.run_batch``: B
+requests for one chunk schedule of dispatches and one device→host
+transfer, every requested analytic computed in the same fused pass.  That
+is the workload shape of triadic analysis over graph *collections* (Chin
+et al., "Scalable Triadic Analysis of Large-Scale Graphs"): many small
+same-shape graphs and a family of analyses, not one giant kernel launch.
 
 Design properties:
 
@@ -19,9 +20,10 @@ Design properties:
     wall-clock timers, so behavior is exactly reproducible in tests).
   * **Out-of-order completion, stable ids** — ``submit`` returns a
     monotonically increasing request id; completions surface in batch
-    flush order, each tagged with its id and bucket.
-  * **Per-bucket stats** — batches formed, occupancy, host syncs: the
-    numbers that tell you whether the fleet is actually batching.
+    flush order, each tagged with its id, bucket, and ops.
+  * **Per-bucket stats** — batches formed, occupancy, host syncs, and a
+    per-ops request breakdown: the numbers that tell you whether the
+    fleet is actually batching.
 
 Synchronous by construction: batches execute inside ``submit``/``flush``
 on the caller's thread (device work itself is still async under the
@@ -30,13 +32,39 @@ engine's double-buffered dispatcher).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, NamedTuple, Optional
+from typing import Any, Dict, Iterable, List, NamedTuple, Optional, Tuple
 
-from ..core.census import CensusResult
 from ..core.graph import CSRGraph
-from ..engine import CensusConfig, GraphMeta, compile_census
+from ..engine import CensusConfig, GraphMeta, compile
+from ..engine.ops import get_op, resolve_ops
 
 __all__ = ["CensusCompletion", "CensusService", "ServiceConfig"]
+
+_DEFAULT_OPS = ("triad_census",)
+
+
+def _normalize_ops(ops) -> Tuple[str, ...]:
+    """Per-request ops spec -> validated tuple of registered op names.
+
+    Validation happens here, at submit time, so a bad spec (typo'd name,
+    unregistered instance) rejects the one request instead of surfacing
+    at flush time and taking its whole batch group down with it.  Groups
+    are keyed (and flushed) by *name*, so a GraphOp instance is accepted
+    only if it IS the registered op of that name — a name-colliding
+    unregistered instance must not be silently swapped for the
+    registry's implementation."""
+    if ops is None:
+        return _DEFAULT_OPS
+    names = []
+    for op in resolve_ops(ops):
+        if get_op(op.name) is not op:  # KeyError if the name is unknown
+            raise ValueError(
+                f"service requests resolve ops by name at flush time, but "
+                f"the submitted {op.name!r} instance is not the registered "
+                f"one — register_op(...) it (overwrite=True to replace the "
+                f"existing registration) before submitting")
+        names.append(op.name)
+    return tuple(names)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,12 +72,12 @@ class ServiceConfig:
     """Batching policy for a :class:`CensusService`.
 
     Attributes:
-        max_batch: flush a bucket group as soon as it holds this many
-            requests — the vmapped batch width the service aims for.
-            Larger batches amortize dispatch further but retrace the
-            batched unit once per new (power-of-two-padded) width.
+        max_batch: flush a group as soon as it holds this many requests —
+            the vmapped batch width the service aims for.  Larger batches
+            amortize dispatch further but retrace the batched unit once
+            per new (power-of-two-padded) width.
         max_wait_requests: bounded-staleness valve.  A partial group is
-            force-flushed once this many *other-bucket* requests have
+            force-flushed once this many *other-group* requests have
             been submitted since the group's oldest member — a rare
             bucket can never wait forever behind hot ones, while a hot
             bucket's own burst is still allowed to fill to
@@ -57,9 +85,10 @@ class ServiceConfig:
             submit flushes immediately (B = 1, the unbatched baseline).
             Counted in requests, not seconds, so tests are
             deterministic.
-        census: the :class:`~repro.engine.CensusConfig` every request
-            executes under — the other half of the plan-cache key, so one
-            service maps to at most one cached plan per bucket.
+        census: the :class:`~repro.engine.EngineConfig` every request
+            executes under — together with the request's (bucket, ops)
+            key it pins the plan-cache entry, so one service maps to at
+            most one cached plan per (bucket, ops) group.
     """
 
     max_batch: int = 8
@@ -74,69 +103,86 @@ class ServiceConfig:
 
 
 class CensusCompletion(NamedTuple):
-    """One finished request: the id ``submit`` returned, its result, and
-    the metadata bucket it was batched under."""
+    """One finished request: the id ``submit`` returned, its result, the
+    metadata bucket it was batched under, and the ops it ran.  For a
+    single-op request (the default census-only case) ``result`` is that
+    op's bare result object — a ``CensusResult`` for ``triad_census`` —
+    and for a multi-op request it is the fused ``{op_name: result}``
+    dict."""
 
     request_id: int
-    result: CensusResult
+    result: Any
     meta: GraphMeta
+    ops: Tuple[str, ...] = _DEFAULT_OPS
 
 
 class CensusService:
-    """Plan-cache-aware batched census serving over a request stream.
+    """Plan-cache-aware batched serving over a mixed-analytic request
+    stream.
 
     ::
 
         svc = CensusService(ServiceConfig(max_batch=8,
                                           census=CensusConfig(backend="xla")))
-        rid = svc.submit(graph)        # queues; may flush a full batch
+        rid = svc.submit(graph)                        # census request
+        rid2 = svc.submit(graph, ops=("triad_census",
+                                      "degree_stats")) # fused multi-op
         done = svc.flush()             # force-run all partial groups
         for c in done:                 # CensusCompletion, flush order
             ...
 
-    ``mesh`` is forwarded to ``compile_census`` for the distributed
-    backend; leave ``None`` for the default single-host mesh.
+    Requests are grouped by (graph bucket, ops): a census-only fleet and
+    a multi-analytic fleet over the same graphs batch separately (they
+    run different fused plans), but everything inside a group rides one
+    vmapped pass.  ``mesh`` is forwarded to the engine for the
+    distributed backend; leave ``None`` for the default single-host mesh.
     """
 
     def __init__(self, config: Optional[ServiceConfig] = None, *, mesh=None):
         self.config = config or ServiceConfig()
         self.mesh = mesh
-        self._pending: Dict[GraphMeta, list] = {}   # meta -> [(rid, graph)]
-        self._first_seq: Dict[GraphMeta, int] = {}  # meta -> oldest rid
+        # (meta, ops) -> [(rid, graph)] / oldest rid
+        self._pending: Dict[tuple, list] = {}
+        self._first_seq: Dict[tuple, int] = {}
         self._completed: List[CensusCompletion] = []
         self._seq = 0
         self._bucket_stats: Dict[GraphMeta, dict] = {}
 
     # -- request path --------------------------------------------------------
 
-    def submit(self, graph: CSRGraph) -> int:
-        """Queue one census request; returns its stable request id.
+    def submit(self, graph: CSRGraph, ops=None) -> int:
+        """Queue one analytic request; returns its stable request id.
 
-        If the request fills its bucket group to ``max_batch``, the group
-        executes immediately (synchronously); any group gone stale under
-        ``max_wait_requests`` is flushed too.  Completions are held until
-        :meth:`poll`.
+        ``ops`` names the :class:`~repro.engine.GraphOp` set to run — a
+        name, a sequence of names, or ``None`` for the census-only
+        default.  If the request fills its (bucket, ops) group to
+        ``max_batch``, the group executes immediately (synchronously);
+        any group gone stale under ``max_wait_requests`` is flushed too.
+        Completions are held until :meth:`poll`.
         """
         rid = self._seq
         self._seq += 1
+        ops_t = _normalize_ops(ops)
         meta = GraphMeta.from_graph(graph, k=self.config.census.k)
-        group = self._pending.setdefault(meta, [])
+        key = (meta, ops_t)
+        group = self._pending.setdefault(key, [])
         if not group:
-            self._first_seq[meta] = rid
+            self._first_seq[key] = rid
         group.append((rid, graph))
         st = self._bucket_stats.setdefault(
             meta, dict(requests=0, batches=0, batched_graphs=0,
-                       host_syncs=0, chunks=0))
+                       host_syncs=0, chunks=0, by_ops={}))
         st["requests"] += 1
+        st["by_ops"][ops_t] = st["by_ops"].get(ops_t, 0) + 1
         if len(group) >= self.config.max_batch:
-            self._flush_bucket(meta)
-        # staleness: count only OTHER buckets' arrivals since a group's
-        # oldest member — a hot bucket's own burst must still be allowed
+            self._flush_group(key)
+        # staleness: count only OTHER groups' arrivals since a group's
+        # oldest member — a hot group's own burst must still be allowed
         # to fill to max_batch.
-        for stale in [m for m, s in self._first_seq.items()
-                      if (self._seq - s - len(self._pending[m])
+        for stale in [k for k, s in self._first_seq.items()
+                      if (self._seq - s - len(self._pending[k])
                           >= self.config.max_wait_requests)]:
-            self._flush_bucket(stale)
+            self._flush_group(stale)
         return rid
 
     def poll(self) -> List[CensusCompletion]:
@@ -149,18 +195,19 @@ class CensusService:
 
     def flush(self) -> List[CensusCompletion]:
         """Execute every pending partial group, then drain completions."""
-        for meta in list(self._pending):
-            self._flush_bucket(meta)
+        for key in list(self._pending):
+            self._flush_group(key)
         return self.poll()
 
-    def run_fleet(self, graphs: Iterable[CSRGraph]) -> List[CensusResult]:
-        """Submit a whole fleet, flush, and return results in input order.
+    def run_fleet(self, graphs: Iterable[CSRGraph], ops=None) -> List[Any]:
+        """Submit a whole fleet (one ``ops`` set for all), flush, and
+        return results in input order.
 
         Completions belonging to requests submitted *before* this call
         (drained by the flush) are retained for the next :meth:`poll` —
         never discarded.
         """
-        ids = [self.submit(g) for g in graphs]
+        ids = [self.submit(g, ops) for g in graphs]
         mine = set(ids)
         done = {}
         others = []
@@ -179,20 +226,23 @@ class CensusService:
 
     # -- execution -----------------------------------------------------------
 
-    def _flush_bucket(self, meta: GraphMeta) -> None:
-        group = self._pending.pop(meta)
-        self._first_seq.pop(meta)
-        plan = compile_census(meta, self.config.census, mesh=self.mesh)
+    def _flush_group(self, key) -> None:
+        meta, ops_t = key
+        group = self._pending.pop(key)
+        self._first_seq.pop(key)
+        plan = compile(meta, ops_t, self.config.census, mesh=self.mesh)
         before_sync = plan.stats["host_syncs"]
         before_chunks = plan.stats["chunks"]
         results = plan.run_batch([g for _, g in group])
+        if len(ops_t) == 1:  # single-op requests complete with bare results
+            results = [r[ops_t[0]] for r in results]
         st = self._bucket_stats[meta]
         st["batches"] += 1
         st["batched_graphs"] += len(group)
         st["host_syncs"] += plan.stats["host_syncs"] - before_sync
         st["chunks"] += plan.stats["chunks"] - before_chunks
         self._completed.extend(
-            CensusCompletion(rid, res, meta)
+            CensusCompletion(rid, res, meta, ops_t)
             for (rid, _), res in zip(group, results))
 
     # -- introspection -------------------------------------------------------
@@ -202,9 +252,10 @@ class CensusService:
 
         ``buckets`` maps each :class:`GraphMeta` to its request/batch
         counts, ``occupancy`` (batched graphs per flushed batch slot —
-        1.0 means every batch left full), and the host syncs / chunks its
-        batches cost.  ``mean_batch`` is the fleet-wide average batch
-        width — the dispatch amortization factor actually achieved.
+        1.0 means every batch left full), the host syncs / chunks its
+        batches cost, and ``by_ops`` (requests per ops tuple — the
+        mixed-analytic split).  ``mean_batch`` is the fleet-wide average
+        batch width — the dispatch amortization factor actually achieved.
         """
         buckets = {}
         total_batches = total_graphs = 0
@@ -212,7 +263,8 @@ class CensusService:
             occ = (st["batched_graphs"]
                    / (st["batches"] * self.config.max_batch)
                    if st["batches"] else 0.0)
-            buckets[meta] = {**st, "occupancy": occ}
+            buckets[meta] = {**st, "by_ops": dict(st["by_ops"]),
+                             "occupancy": occ}
             total_batches += st["batches"]
             total_graphs += st["batched_graphs"]
         return dict(

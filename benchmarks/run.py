@@ -490,6 +490,100 @@ def bench_ops(scale: float, *, smoke: bool = False,
     print(f"# wrote {out}")
 
 
+def bench_executor(scale: float, *, smoke: bool = False,
+                   out: str = "BENCH_census.json"):
+    """``--executor``: static-vs-dynamic schedule and 1-vs-N device
+    throughput (the executor layer's claim, measured).
+
+    Runs the census on a degree-skewed R-MAT graph under (a) the default
+    static single-device schedule, (b) the dynamic cost-model schedule on
+    one device (degree-aware chunk boundaries alone), and (c) the dynamic
+    schedule work-queued over every visible device.  The host-platform
+    device count must be fixed before jax initializes, so when only one
+    device is visible this bench re-execs itself under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (CI sets the
+    flag up front).  Results merge into ``BENCH_census.json`` under
+    ``"executor"``, including ``dynamic_speedup`` — pool-dynamic vs
+    static-single throughput — and the per-device chunk spread.
+    """
+    import os
+
+    n_dev = len(jax.devices())
+    # the forced-host-device flag only multiplies CPU devices and must be
+    # set before jax initializes, so re-exec exactly once and only where
+    # it can help — a non-CPU backend (one GPU/TPU visible) would see the
+    # same single device again and loop forever.
+    if (n_dev < 2 and jax.default_backend() == "cpu"
+            and not os.environ.get("_REPRO_EXECUTOR_REEXEC")):
+        import subprocess
+        import sys
+        env = {**os.environ, "_REPRO_EXECUTOR_REEXEC": "1"}
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count=8"
+                            ).strip()
+        cmd = [sys.executable, __file__, "--executor", "--scale", str(scale),
+               "--out", out] + (["--smoke"] if smoke else [])
+        r = subprocess.run(cmd, env=env)
+        if r.returncode:
+            raise RuntimeError(
+                f"executor bench subprocess failed ({r.returncode})")
+        return  # child merged its 'executor' section into the JSON
+
+    from repro.core import generators
+    from repro.engine import EngineConfig, clear_plan_cache, compile
+
+    if smoke:
+        g = generators.rmat(10, edge_factor=8, seed=0)
+        chunk, reps = 512, 3
+    else:
+        g = generators.rmat(13, edge_factor=8, seed=0)
+        chunk, reps = 2048, 4
+    # on a host where the pool cannot grow (single non-CPU device), the
+    # N-device case would duplicate dynamic-1dev — drop it.
+    cases = [("static", 1), ("dynamic", 1)]
+    if n_dev > 1:
+        cases.append(("dynamic", n_dev))
+    clear_plan_cache()
+    plans = []
+    baseline = None
+    for schedule, nd in cases:
+        cfg = EngineConfig(backend="xla", batch=256, chunk_dyads=chunk,
+                           schedule=schedule, n_executor_devices=nd)
+        plan = compile(g, ("triad_census",), cfg)
+        ref = plan.run(g)["triad_census"].counts  # warm every device replica
+        baseline = ref if baseline is None else baseline
+        assert (ref == baseline).all()  # bit-identity across schedules
+        plans.append(plan)
+    # interleave warm reps across cases so machine drift hits them
+    # equally (this container is noisy-neighbor territory); min-of-reps.
+    warms = [float("inf")] * len(plans)
+    c0s = [p.stats["chunks"] for p in plans]
+    for _ in range(reps):
+        for i, plan in enumerate(plans):
+            t0 = time.perf_counter()
+            plan.run(g)
+            warms[i] = min(warms[i], time.perf_counter() - t0)
+    rows = []
+    for (schedule, _), plan, warm, c0 in zip(cases, plans, warms, c0s):
+        row = dict(schedule=schedule, n_devices=plan.executor.n_devices,
+                   warm_s=warm, dyads_per_sec=g.n_dyads / max(warm, 1e-9),
+                   chunks_per_run=(plan.stats["chunks"] - c0) // reps,
+                   device_chunks={str(d): c for d, c in
+                                  plan.stats["device_chunks"].items()})
+        rows.append(row)
+        print(f"census_executor_{schedule}_{row['n_devices']}dev,"
+              f"{warm * 1e6:.0f},dyads_per_sec={row['dyads_per_sec']:.0f}"
+              f",chunks={row['chunks_per_run']}")
+    speedup = rows[0]["warm_s"] / max(rows[-1]["warm_s"], 1e-9)
+    print(f"census_executor_dynamic_speedup,0,"
+          f"dynamic_{n_dev}dev_vs_static_1dev={speedup:.2f}x")
+    _merge_json(out, schema=1, jax_backend=jax.default_backend(),
+                executor=dict(smoke=smoke, n_devices_visible=n_dev,
+                              graph=dict(n=g.n, m=g.m, dyads=g.n_dyads),
+                              results=rows, dynamic_speedup=speedup))
+    print(f"# wrote {out}")
+
+
 def bench_lm_smoke(scale: float):
     """Framework-side: smoke-scale train-step latency per arch."""
     from repro.config import RunConfig, get_config, list_configs
@@ -527,6 +621,11 @@ def main() -> None:
                     help="GraphOp bench: per-op passes vs one fused "
                          "multi-analytic pass (merges an 'ops' section "
                          "into the JSON)")
+    ap.add_argument("--executor", action="store_true",
+                    help="executor bench: static vs dynamic schedule, "
+                         "1 vs N virtual devices (merges an 'executor' "
+                         "section into the JSON; re-execs itself under "
+                         "forced 8 host devices when needed)")
     ap.add_argument("--sync-baseline", action="store_true",
                     help="also time the synchronous (device_accum=False) "
                          "data path for an A/B speedup in the JSON")
@@ -545,6 +644,9 @@ def main() -> None:
     if args.ops:
         bench_ops(args.scale, smoke=args.smoke, out=args.out)
         return
+    if args.executor:
+        bench_executor(args.scale, smoke=args.smoke, out=args.out)
+        return
     if args.smoke:
         device_pipeline(args.scale)
         return
@@ -558,6 +660,7 @@ def main() -> None:
         "device_pipeline": device_pipeline,
         "serve": lambda s: bench_serve(s, smoke=False, out=args.out),
         "ops": lambda s: bench_ops(s, smoke=False, out=args.out),
+        "executor": lambda s: bench_executor(s, smoke=False, out=args.out),
         "lm_smoke": bench_lm_smoke,
     }
     only = [s for s in args.only.split(",") if s]

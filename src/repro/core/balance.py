@@ -124,6 +124,43 @@ def exact_s_sizes(g: CSRGraph, u: np.ndarray, v: np.ndarray, batch: int = 1024,
     return np.concatenate(outs)[:d].astype(np.int64)
 
 
+def chunk_bounds_by_cost(weights: np.ndarray, capacity: int, *,
+                         target: float | None = None) -> np.ndarray:
+    """Cost-model-driven chunk boundaries over a task stream.
+
+    Splits ``[0, len(weights))`` into contiguous chunks of roughly equal
+    *predicted* work — the streaming analogue of the paper's balanced
+    task queues: where a fixed ``chunk_size`` gives heavy-degree regions
+    of the dyad stream heavier chunks, equal-cost splitting gives them
+    **smaller** ones, so a work-queue scheduler
+    (:class:`repro.engine.executor.Executor`) never hands one device a
+    chunk that dominates the run.
+
+    ``capacity`` caps every chunk's *length* (the compiled chunk unit's
+    static shape); ``target`` is the per-chunk cost quota, defaulting to
+    ``total / ceil(D / capacity)`` so the chunk count stays comparable
+    to the fixed-size schedule.  Returns an int64 boundary array ``b``
+    with ``b[0] == 0``, ``b[-1] == D`` and every span in
+    ``(0, capacity]``; a single task heavier than ``target`` gets a
+    chunk of its own.
+    """
+    D = len(weights)
+    if D == 0:
+        return np.zeros(1, dtype=np.int64)
+    if capacity < 1:
+        raise ValueError(f"capacity must be >= 1, got {capacity}")
+    cum = np.concatenate([[0.0], np.cumsum(weights, dtype=np.float64)])
+    if target is None:
+        target = cum[-1] / max(1, -(-D // capacity))
+    target = max(float(target), 1e-12)
+    bounds = [0]
+    while bounds[-1] < D:
+        s = bounds[-1]
+        e = int(np.searchsorted(cum, cum[s] + target, side="right")) - 1
+        bounds.append(min(max(e, s + 1), s + capacity, D))
+    return np.asarray(bounds, dtype=np.int64)
+
+
 def _pad_shards(shards: list[np.ndarray], u, v):
     L = max((len(s) for s in shards), default=1) or 1
     T = len(shards)

@@ -257,6 +257,36 @@ def sort_dyads_by_bucket(nbr_deg: jax.Array, out_ptr: jax.Array,
     return u[order], v[order], counts[: len(ks)]
 
 
+def host_bucket_schedule(g: CSRGraph, ks: tuple, *,
+                         with_needs: bool = True
+                         ) -> "tuple[np.ndarray, np.ndarray | None]":
+    """Host-side mirror of :func:`sort_dyads_by_bucket`'s control outputs.
+
+    Returns ``(bucket_counts, need_sorted)``: the per-bucket dyad counts
+    (identical, by construction, to the histogram the device sort
+    computes — same ``need`` formula over the same live dyads) and each
+    dyad's tile-width need in the device stream's (bucket, need) sort
+    order.  Both are derived from the degree arrays the host already
+    owns, so the pallas driver can lay out its per-bucket chunk loop —
+    and the executor its cost-model chunk boundaries — **without the
+    device→host control fetch** the engine used to pay (the fetch also
+    serialized the pipeline: no chunk could be scheduled until the
+    device sort finished).
+
+    ``with_needs=False`` skips the O(D log D) sort and returns ``None``
+    for ``need_sorted`` — the static schedule only consumes the counts.
+    """
+    u, v = canonical_dyads(g)
+    deg = np.asarray(g.arrays.nbr_deg)
+    out_deg = np.diff(np.asarray(g.arrays.out_ptr))
+    need = np.maximum(np.maximum(deg[u], deg[v]),
+                      np.maximum(out_deg[u], out_deg[v])).astype(np.int64)
+    ks_arr = np.asarray(ks, dtype=np.int64)
+    b = (need[:, None] > ks_arr[None, :]).sum(1)
+    counts = np.bincount(b, minlength=len(ks))[: len(ks)].astype(np.int64)
+    return counts, need[np.lexsort((need, b))] if with_needs else None
+
+
 def make_census_fn(g: CSRGraph, *, batch: int = 256, K: int | None = None,
                    acc_dtype=jnp.int32):
     """Build a jitted census function for graphs with this one's metadata.

@@ -26,7 +26,13 @@ op names + config (see :mod:`repro.engine.plan`), and execution streams
 the dyad list in bounded-memory chunks through a device-resident
 pipeline: on-device dyad enumeration, async double-buffered chunk
 dispatch, and an on-device cross-chunk accumulator with one device→host
-transfer per run (see :mod:`repro.engine.backends`).  ``Plan.run_batch``
+transfer per run (see :mod:`repro.engine.backends`).  Chunk dispatch
+belongs to the :class:`Executor` layer
+(:mod:`repro.engine.executor`): ``EngineConfig(schedule="dynamic",
+n_executor_devices=...)`` carves the stream into cost-model chunks
+(heavy-degree dyads get smaller chunks) and work-queues them over a
+device pool — the analogue of the paper's OpenMP dynamic scheduling —
+with results bit-identical to the static single-device default.  ``Plan.run_batch``
 executes B same-bucket graphs as one vmapped batch (``plan.run`` is the
 B = 1 case); :class:`repro.serve.CensusService` builds mixed-analytic
 fleet serving on top.
@@ -42,16 +48,17 @@ Architecture walk-through: ``docs/ARCHITECTURE.md``; paper-concept index:
 ``docs/PAPER_MAPPING.md``.
 """
 from ..core.census import CensusResult
-from .config import BACKENDS, CensusConfig, EngineConfig
+from .config import BACKENDS, SCHEDULES, CensusConfig, EngineConfig
+from .executor import ChunkTask, Executor
 from .ops import (DegreeStats, DyadCensus, GraphOp, TriadicProfile, get_op,
                   list_ops, register_op)
 from .plan import (CensusPlan, GraphMeta, Plan, clear_plan_cache, compile,
                    compile_census, plan_cache_stats, set_plan_cache_capacity)
 
 __all__ = [
-    "BACKENDS", "CensusConfig", "CensusPlan", "CensusResult", "DegreeStats",
-    "DyadCensus", "EngineConfig", "GraphMeta", "GraphOp", "Plan",
-    "TriadicProfile", "clear_plan_cache", "compile", "compile_census",
-    "get_op", "list_ops", "plan_cache_stats", "register_op",
-    "set_plan_cache_capacity",
+    "BACKENDS", "CensusConfig", "CensusPlan", "CensusResult", "ChunkTask",
+    "DegreeStats", "DyadCensus", "EngineConfig", "Executor", "GraphMeta",
+    "GraphOp", "Plan", "SCHEDULES", "TriadicProfile", "clear_plan_cache",
+    "compile", "compile_census", "get_op", "list_ops", "plan_cache_stats",
+    "register_op", "set_plan_cache_capacity",
 ]

@@ -24,14 +24,16 @@ The fused pass folds three kinds of contribution into one accumulator:
 Two data paths exist per backend (``EngineConfig.device_accum``):
 
   * **device-resident (default)** — dyads are enumerated / bucketed / chunk
-    -sliced on device, chunk ``k + pipeline_depth`` is dispatched while
-    chunk ``k`` still computes (async double buffering), and the fused
-    partial counts accumulate **on device** across chunks as an int32
-    hi/lo pair (no x64 requirement).  One device→host transfer completes
-    the run — the paper's single end-of-run merge — *regardless of how
-    many ops are fused*.  (The pallas backend adds one small control fetch
-    per run for its bucket schedule, so its counted syncs are 2, still
-    O(1) in the chunk count.)
+    -sliced on device and the fused partial counts accumulate **on
+    device** across chunks as an int32 hi/lo pair (no x64 requirement).
+    Chunk dispatch belongs to the plan's
+    :class:`~repro.engine.executor.Executor`: the static schedule is the
+    classic in-order double-buffered loop, the dynamic schedule carves
+    the stream into cost-model chunks and work-queues them over a device
+    pool.  Either way ONE device→host transfer completes the run — the
+    paper's single end-of-run merge — *regardless of how many ops are
+    fused or how many devices ran them* (the pallas bucket schedule is
+    derived host-side, so even that backend pays no control fetch).
   * **synchronous baseline** — the PR-1 path: host numpy dyad slicing,
     per-chunk upload, and a blocking per-chunk device→host transfer with
     host int64 accumulation.  Kept runnable for A/B benchmarking
@@ -46,9 +48,9 @@ the raw streamed/once bins.
 """
 from __future__ import annotations
 
-import collections
 import functools
 import math
+import weakref
 from typing import NamedTuple
 
 import jax
@@ -57,42 +59,11 @@ import numpy as np
 
 from ..core import balance
 from ..core.census import (canonical_dyads, enumerate_dyads_device,
-                           pad_dyads, sort_dyads_by_bucket)
+                           host_bucket_schedule, pad_dyads,
+                           sort_dyads_by_bucket)
 from ..core.distributed import make_census_fn_for_mesh
 from ..core.graph import CSRGraph, next_pow2
-
-# the device accumulator is an int32 (hi, lo) pair: count = hi * 2**30 + lo
-# with 0 <= lo < 2**30 — exact for totals up to 2**61 without enabling x64.
-# Per-fold deltas must stay below 2**30, which holds whenever
-# batch * n < 2**30 (the same order of invariant the int32 scan partials
-# already required; GraphOp kernels promise the same bound).
-_ACC_SHIFT = 30
-
-
-def _acc_update(hi, lo, delta):
-    """Fold a non-negative int32 partial into the hi/lo accumulator."""
-    lo = lo + delta.astype(jnp.int32)
-    carry = lo >> _ACC_SHIFT
-    return hi + carry, lo - (carry << _ACC_SHIFT)
-
-
-def _acc_fetch(plan, hi, lo) -> np.ndarray:
-    """THE device→host transfer of a device-resident run (counted)."""
-    plan.stats["host_syncs"] += 1
-    packed = np.asarray(jnp.stack([hi, lo]), dtype=np.int64)
-    return (packed[0] << _ACC_SHIFT) + packed[1]
-
-
-def _throttle(window: collections.deque, ref, depth: int) -> None:
-    """Double-buffering backpressure: allow ``depth`` chunks in flight.
-
-    Blocks on the dispatch ``depth`` chunks back (a wait, not a transfer)
-    so the device work queue stays bounded while chunk ``k + depth`` is
-    being enqueued as chunk ``k`` computes.
-    """
-    window.append(ref)
-    if len(window) > max(1, depth):
-        window.popleft().block_until_ready()
+from .executor import ChunkTask, _acc_fetch, _acc_update
 
 
 def _once_sync(plan, counts: np.ndarray, arrays, n) -> None:
@@ -173,24 +144,30 @@ def make_xla_chunk_fn(layout, config, stats: dict):
 def _xla_stream_body(layout, config, chunk: int):
     """Single-graph chunk body shared by the scalar and batched xla units.
 
-    ``(arrays, n, dyads_u, dyads_v, n_dyads, start, hi, lo) -> (hi, lo)``:
-    the chunk at ``start`` is carved out of the device-resident dyad list
-    with ``dynamic_slice`` and its fused partial counts fold into the
-    carried hi/lo accumulator per scan step (per-run ``once``
+    ``(arrays, n, dyads_u, dyads_v, limit, start, hi, lo) -> (hi, lo)``:
+    the dyad span ``[start, limit)`` is carved out of the device-resident
+    dyad list with ``dynamic_slice`` and its fused partial counts fold
+    into the carried hi/lo accumulator per scan step (per-run ``once``
     contributions are the driver's job — :func:`_once_device` — so no
-    chunk re-dispatches vertex-space work).  Dyads at or past ``n_dyads``
-    are masked invalid, so a graph whose dyad list is shorter than the
-    chunk schedule contributes exactly nothing for the excess chunks —
-    that is what makes the vmapped batch unit bit-identical to sequential
-    runs.
+    chunk re-dispatches vertex-space work).  The gather window is
+    anchored at ``min(start, len(dyads) - chunk)`` and lanes outside
+    ``[start, limit)`` are masked invalid, so cost-model chunk
+    boundaries (any ``start``, any span length up to ``chunk`` — the
+    executor's dynamic schedule) stay in bounds, and a graph whose dyad
+    list is shorter than the chunk schedule contributes exactly nothing
+    for the excess chunks — that is what makes the vmapped batch unit
+    (which passes the per-graph dyad count as ``limit``) bit-identical
+    to sequential runs.
     """
     batch = config.batch
     fused = layout.batch_kernel()
 
-    def body(arrays, n, du, dv, n_dyads, start, hi, lo):
-        u = jax.lax.dynamic_slice(du, (start,), (chunk,))
-        v = jax.lax.dynamic_slice(dv, (start,), (chunk,))
-        valid = (start + jnp.arange(chunk, dtype=jnp.int32)) < n_dyads
+    def body(arrays, n, du, dv, limit, start, hi, lo):
+        base = jnp.minimum(start, du.shape[0] - chunk)
+        pos = base + jnp.arange(chunk, dtype=jnp.int32)
+        u = jax.lax.dynamic_slice(du, (base,), (chunk,))
+        v = jax.lax.dynamic_slice(dv, (base,), (chunk,))
+        valid = (pos >= start) & (pos < limit)
         u = jnp.where(valid, u, 0)
         v = jnp.where(valid, v, 1)  # keep the u < v padding invariant
         steps = chunk // batch
@@ -213,16 +190,18 @@ def make_xla_stream_fn(layout, config, stats: dict, chunk: int):
     """Device-resident unit: slice + fused kernels + accumulate, one
     dispatch.
 
-    ``(arrays, n, dyads_u, dyads_v, n_dyads, start, hi, lo) -> (hi, lo)``.
+    ``(arrays, n, dyads_u, dyads_v, limit, start, hi, lo) -> (hi, lo)``.
     The full (bucket-padded) dyad list stays on device; the host only ever
-    dispatches (see :func:`_xla_stream_body`).
+    dispatches (see :func:`_xla_stream_body`).  One ``jax.jit`` callable
+    serves every executor pool device — jit caches one compiled replica
+    per committed input device.
     """
     body = _xla_stream_body(layout, config, chunk)
 
     @jax.jit
-    def stream_fn(arrays, n, du, dv, n_dyads, start, hi, lo):
+    def stream_fn(arrays, n, du, dv, limit, start, hi, lo):
         stats["traces"] += 1
-        return body(arrays, n, du, dv, n_dyads, start, hi, lo)
+        return body(arrays, n, du, dv, limit, start, hi, lo)
 
     return stream_fn
 
@@ -248,6 +227,59 @@ def make_xla_stream_batch_fn(layout, config, stats: dict, chunk: int):
         return body(arrays, n, du, dv, n_dyads, start, hi, lo)
 
     return stream_batch_fn
+
+
+def _memo_tasks(plan, g: CSRGraph, key, build) -> "list[ChunkTask]":
+    """Per-plan memo of a host-derived chunk schedule.
+
+    The task list is a pure function of ``(graph, key)`` but costs O(m)
+    host preprocessing (dyad enumeration, degree weights, sorts) — pay
+    it once per live graph, not once per run, since plans exist exactly
+    to amortize per-run setup (the serving hot path reruns the same
+    graphs).  Keys carry ``id(g)`` plus a weakref identity check, so a
+    recycled id after GC can never serve a stale schedule; the memo is
+    bounded to the last few graphs (plans live forever in the LRU cache
+    and must not pin unbounded host memory).
+    """
+    full_key = (key, id(g))
+    hit = plan._task_memo.get(full_key)
+    if hit is not None and hit[0]() is g:
+        return hit[1]
+    tasks = build()
+    while len(plan._task_memo) >= 8:
+        plan._task_memo.pop(next(iter(plan._task_memo)))
+    plan._task_memo[full_key] = (weakref.ref(g), tasks)
+    return tasks
+
+
+def _dyad_tasks(plan, g: CSRGraph, chunk=None) -> "list[ChunkTask]":
+    """Chunk schedule over the dyad stream ``[0, n_dyads)``.
+
+    Static: the fixed-size grid — bit-identical to the pre-executor
+    engine.  Dynamic: cost-model boundaries — per-dyad degree weights
+    (``config.weight_model``, the paper's Table 4.8 cost models) drive
+    equal-predicted-work spans via
+    :func:`repro.core.balance.chunk_bounds_by_cost`, so heavy-degree
+    regions of the stream get smaller chunks.  The weights are host-side
+    preprocessing, exactly like the paper's precomputed task weights
+    (host dyad order matches the device enumeration bit for bit — see
+    ``tests/test_pipeline.py::test_device_enumeration_matches_host``),
+    memoized per graph (:func:`_memo_tasks`).
+    """
+    chunk = chunk or plan.chunk
+    if plan.config.schedule == "dynamic" and g.n_dyads:
+        def build():
+            u, v = canonical_dyads(g)
+            w = balance.dyad_weights(g, u, v, plan.config.weight_model)
+            bounds = balance.chunk_bounds_by_cost(w, chunk)
+            cum = np.concatenate([[0.0], np.cumsum(w, dtype=np.float64)])
+            return [ChunkTask(int(a), int(b), float(cum[b] - cum[a]))
+                    for a, b in zip(bounds[:-1], bounds[1:])]
+
+        return _memo_tasks(plan, g, ("dyads", chunk), build)
+    return [ChunkTask(s, min(s + chunk, g.n_dyads),
+                      float(min(s + chunk, g.n_dyads) - s))
+            for s in range(0, g.n_dyads, chunk)]
 
 
 def _run_xla_sync(plan, g: CSRGraph) -> np.ndarray:
@@ -279,16 +311,20 @@ def run_xla(plan, g: CSRGraph) -> np.ndarray:
                                     jnp.int32(g.m_nbr),
                                     out_size=plan.dyad_pad)
     n = jnp.int32(g.n)
-    n_dyads = jnp.int32(g.n_dyads)
     hi = lo = jnp.zeros(plan.layout.total_bins, jnp.int32)
-    hi, lo = _once_device(plan, hi, lo, arrays, n)
-    window: collections.deque = collections.deque()
-    n_chunks = -(-g.n_dyads // plan.chunk)
-    for k in range(n_chunks):
-        hi, lo = plan._fn(arrays, n, du, dv, n_dyads,
-                          jnp.int32(k * plan.chunk), hi, lo)
-        plan.stats["chunks"] += 1
-        _throttle(window, hi, plan.config.pipeline_depth)
+    init = _once_device(plan, hi, lo, arrays, n)
+
+    def place(dev):
+        ctx = (arrays, n, du, dv)
+        return ctx if dev is None else jax.device_put(ctx, dev)
+
+    def step(ctx, hi, lo, t):
+        a, nn, su, sv = ctx
+        return plan._fn(a, nn, su, sv, jnp.int32(t.end), jnp.int32(t.start),
+                        hi, lo)
+
+    hi, lo = plan.executor.run(_dyad_tasks(plan, g), place=place, step=step,
+                               init=init)
     return _acc_fetch(plan, hi, lo)
 
 
@@ -320,14 +356,23 @@ def run_xla_batch(plan, graphs) -> np.ndarray:
                                       out_size=plan.dyad_pad))
     du, dv = enum(arrays.nbr_ptr, arrays.nbr_idx, m_nbr)
     hi = lo = jnp.zeros((B + pad, plan.layout.total_bins), jnp.int32)
-    hi, lo = _once_device(plan, hi, lo, arrays, n, batched=True)
-    window: collections.deque = collections.deque()
+    init = _once_device(plan, hi, lo, arrays, n, batched=True)
     fn = plan.batch_fn()
-    for k in range(-(-max_dyads // plan.chunk)):
-        hi, lo = fn(arrays, n, du, dv, n_dyads,
-                    jnp.int32(k * plan.chunk), hi, lo)
-        plan.stats["chunks"] += 1
-        _throttle(window, hi, plan.config.pipeline_depth)
+    chunk = plan.chunk
+
+    def place(dev):
+        ctx = (arrays, n, du, dv, n_dyads)
+        return ctx if dev is None else jax.device_put(ctx, dev)
+
+    def step(ctx, hi, lo, t):
+        # the batched unit masks by per-graph dyad count (the vmapped
+        # ``limit`` axis), so the task's ``end`` is schedule metadata only.
+        a, nn, su, sv, nd = ctx
+        return fn(a, nn, su, sv, nd, jnp.int32(t.start), hi, lo)
+
+    tasks = [ChunkTask(s, min(s + chunk, max_dyads), float(chunk))
+             for s in range(0, max_dyads, chunk)]
+    hi, lo = plan.executor.run(tasks, place=place, step=step, init=init)
     return _acc_fetch(plan, hi, lo)[:B]
 
 
@@ -418,15 +463,25 @@ def run_distributed(plan, g: CSRGraph) -> np.ndarray:
     # slab slicing + on-device accumulation; one transfer at the end.
     dtu, dtv, dtval = jnp.asarray(tu), jnp.asarray(tv), jnp.asarray(tval)
     hi = lo = jnp.zeros(plan.layout.total_bins, jnp.int32)
-    hi, lo = _once_device(plan, hi, lo, arrays, n)
-    window: collections.deque = collections.deque()
-    for s in range(0, L + pad, cl):
-        su = jax.lax.dynamic_slice(dtu, (0, s), (n_dev, cl))
-        sv = jax.lax.dynamic_slice(dtv, (0, s), (n_dev, cl))
-        sva = jax.lax.dynamic_slice(dtval, (0, s), (n_dev, cl))
-        hi, lo = plan._fn(arrays, n, su, sv, sva, hi, lo)
-        plan.stats["chunks"] += 1
-        _throttle(window, hi, plan.config.pipeline_depth)
+    init = _once_device(plan, hi, lo, arrays, n)
+
+    def place(dev):
+        # the mesh already owns every device (the executor pool is pinned
+        # to one slot for this backend), so placement stays with shard_map.
+        return (arrays, n, dtu, dtv, dtval)
+
+    def step(ctx, hi, lo, t):
+        a, nn, qu, qv, qval = ctx
+        su = jax.lax.dynamic_slice(qu, (0, t.start), (n_dev, cl))
+        sv = jax.lax.dynamic_slice(qv, (0, t.start), (n_dev, cl))
+        sva = jax.lax.dynamic_slice(qval, (0, t.start), (n_dev, cl))
+        return plan._fn(a, nn, su, sv, sva, hi, lo)
+
+    # slab columns carry near-uniform modeled work already (pack_tasks
+    # balanced them), so the task grid stays fixed-size on this backend.
+    tasks = [ChunkTask(s, s + cl, float(cl * n_dev))
+             for s in range(0, L + pad, cl)]
+    hi, lo = plan.executor.run(tasks, place=place, step=step, init=init)
     return _acc_fetch(plan, hi, lo)
 
 
@@ -577,8 +632,8 @@ def run_pallas(plan, g: CSRGraph) -> np.ndarray:
     ks = tuple(sorted({min(max(int(k), 1), kmax)
                        for k in cfg.buckets} | {kmax}))
     # the tile kernel's whole support system — device-built transpose CSR,
-    # degree-bucket sort, and the bucket-count control fetch — only exists
-    # for the census slice; a plan of generic ops skips all three.
+    # degree-bucket sort, and the host-derived bucket schedule — only
+    # exists for the census slice; a plan of generic ops skips all three.
     census_needed = "triad_census" in plan.layout.slices
     arrays = plan.padded_arrays(g, with_in_csr=census_needed)
     du, dv = enumerate_dyads_device(arrays.nbr_ptr, arrays.nbr_idx,
@@ -586,32 +641,74 @@ def run_pallas(plan, g: CSRGraph) -> np.ndarray:
                                     out_size=plan.dyad_pad)
     n = jnp.int32(g.n)
     hi = lo = jnp.zeros(plan.layout.total_bins, jnp.int32)
-    hi, lo = _once_device(plan, hi, lo, arrays, n)
-    window: collections.deque = collections.deque()
+    init = _once_device(plan, hi, lo, arrays, n)
     if not census_needed:
-        end = jnp.int32(g.n_dyads)
-        for s in range(0, g.n_dyads, chunk):
-            hi, lo = plan._fn(arrays, n, du, dv, jnp.int32(s), end,
-                              hi, lo, K=kmax, chunk=chunk, block=block,
-                              interpret=interpret)
-            plan.stats["chunks"] += 1
-            _throttle(window, hi, plan.config.pipeline_depth)
-        return _acc_fetch(plan, hi, lo)
-    su, sv, counts_dev = sort_dyads_by_bucket(
-        arrays.nbr_deg, arrays.out_ptr, du, dv, jnp.int32(g.n_dyads), ks=ks)
-    # the one small control transfer: per-bucket dyad counts drive the host
-    # chunk schedule (O(1) per run, independent of chunk count).
-    bucket_counts = np.asarray(counts_dev)
-    plan.stats["host_syncs"] += 1
-    offset = 0
-    for i, K in enumerate(ks):
-        c = int(bucket_counts[i])
-        end = jnp.int32(offset + c)
-        for s in range(offset, offset + c, chunk):
-            hi, lo = plan._fn(arrays, n, su, sv, jnp.int32(s), end,
-                              hi, lo, K=K, chunk=chunk, block=block,
-                              interpret=interpret)
-            plan.stats["chunks"] += 1
-            _throttle(window, hi, plan.config.pipeline_depth)
-        offset += c
+        stream_u, stream_v = du, dv
+        tasks = [t._replace(key=kmax)
+                 for t in _dyad_tasks(plan, g, chunk=chunk)]
+    else:
+        stream_u, stream_v, _ = sort_dyads_by_bucket(
+            arrays.nbr_deg, arrays.out_ptr, du, dv, jnp.int32(g.n_dyads),
+            ks=ks)
+        # the per-bucket schedule used to be a device→host control fetch
+        # of the sort's bucket counts — the extra counted sync the other
+        # backends never paid, and it stalled dispatch until the device
+        # sort finished.  The counts are a pure function of the degree
+        # arrays the host already owns, so derive them (and the per-dyad
+        # tile-width needs, the dynamic schedule's cost model) host-side.
+        tasks = _pallas_bucket_tasks(plan, g, ks, chunk)
+
+    def place(dev):
+        ctx = (arrays, n, stream_u, stream_v)
+        return ctx if dev is None else jax.device_put(ctx, dev)
+
+    def step(ctx, hi, lo, t):
+        a, nn, su, sv = ctx
+        return plan._fn(a, nn, su, sv, jnp.int32(t.start), jnp.int32(t.end),
+                        hi, lo, K=int(t.key), chunk=chunk, block=block,
+                        interpret=interpret)
+
+    hi, lo = plan.executor.run(tasks, place=place, step=step, init=init)
     return _acc_fetch(plan, hi, lo)
+
+
+def _pallas_bucket_tasks(plan, g: CSRGraph, ks: tuple,
+                         chunk: int) -> "list[ChunkTask]":
+    """Per-bucket chunk schedule over the bucket-sorted dyad stream.
+
+    Each task carries its bucket's tile width ``K`` (the pallas kernel's
+    static specialization).  Static: the fixed-size grid within every
+    bucket, bit-identical to the pre-executor loop.  Dynamic: per-dyad
+    tile-width needs are the cost model — a span's predicted work is the
+    sum of its needs against one stream-wide quota, so big-K buckets get
+    proportionally smaller chunks (the paper's degree-based GPU load
+    balancing, applied to the chunk schedule itself).  Memoized per
+    graph (:func:`_memo_tasks`) — the bucket counts replaced a per-run
+    device control fetch and must stay cheaper than it on repeat runs.
+    """
+    def build():
+        dynamic = plan.config.schedule == "dynamic"
+        bucket_counts, need_sorted = host_bucket_schedule(
+            g, ks, with_needs=dynamic)
+        if dynamic:
+            cum = np.concatenate([[0.0],
+                                  np.cumsum(need_sorted, dtype=np.float64)])
+            target = cum[-1] / max(1, -(-g.n_dyads // chunk))
+        tasks: list = []
+        offset = 0
+        for i, K in enumerate(ks):
+            c = int(bucket_counts[i])
+            if dynamic and c:
+                bounds = offset + balance.chunk_bounds_by_cost(
+                    need_sorted[offset:offset + c], chunk, target=target)
+                tasks += [ChunkTask(int(a), int(b), float(cum[b] - cum[a]),
+                                    K)
+                          for a, b in zip(bounds[:-1], bounds[1:])]
+            else:
+                tasks += [ChunkTask(s, offset + c,
+                                    float(K * min(chunk, offset + c - s)), K)
+                          for s in range(offset, offset + c, chunk)]
+            offset += c
+        return tasks
+
+    return _memo_tasks(plan, g, ("pallas", ks, chunk), build)

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 BACKENDS = ("xla", "pallas", "distributed", "auto")
+SCHEDULES = ("static", "dynamic")
 
 _ACC_DTYPES = {"int32": jnp.int32, "int64": jnp.int64, "float32": jnp.float32}
 
@@ -61,19 +62,35 @@ class EngineConfig:
             chunk-sliced on device, partial counts accumulate **on device**
             across chunks as an int32 hi/lo pair (no x64 requirement), and
             one device→host transfer completes the run — the paper's
-            single end-of-run merge (pallas adds one small control fetch
-            for its bucket schedule: 2 counted syncs, still O(1) in the
-            chunk count).  ``False`` restores the synchronous
+            single end-of-run merge, on every backend (the pallas bucket
+            schedule is derived host-side from the degree arrays, so it
+            costs no control fetch).  ``False`` restores the synchronous
             baseline: host-side dyad enumeration, per-chunk upload, and a
             blocking per-chunk device→host transfer with host int64
             accumulation (kept runnable for benchmark comparison via
             ``benchmarks/run.py --sync-baseline``).
-        pipeline_depth: max in-flight chunks in the device-resident path
-            (double-buffering depth).  The dispatcher enqueues chunk
-            ``k + depth`` while chunk ``k`` still computes, then applies
-            backpressure (a non-transferring block) so device queue memory
-            stays bounded.  ``1`` degenerates to lockstep dispatch; ``2``
-            (default) is classic double buffering.
+        pipeline_depth: max in-flight chunks per device in the
+            device-resident path (double-buffering depth).  The dispatcher
+            enqueues chunk ``k + depth`` while chunk ``k`` still computes,
+            then applies backpressure (a non-transferring block) so device
+            queue memory stays bounded.  ``1`` degenerates to lockstep
+            dispatch; ``2`` (default) is classic double buffering.
+        schedule: chunk scheduling policy — ``"static"`` (default) runs
+            the in-order single-device loop, bit-identical to the
+            pre-executor engine; ``"dynamic"`` carves the dyad stream
+            into chunks of roughly equal *predicted* work (the
+            :mod:`repro.core.balance` degree cost model — heavy-degree
+            dyads get smaller chunks) and dispatches them to the
+            executor's device pool with a work-queue policy, the jax
+            analogue of the paper's OpenMP dynamic scheduling.  See
+            :mod:`repro.engine.executor`.
+        n_executor_devices: executor device-pool width for
+            ``schedule="dynamic"`` (``None`` = every visible device;
+            clamped to the visible count).  Ignored — normalized to 1 —
+            under ``schedule="static"`` and on the distributed backend,
+            whose mesh already owns every device.  Exercise multi-device
+            pools on CPU via
+            ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
     """
 
     backend: str = "auto"
@@ -88,6 +105,8 @@ class EngineConfig:
     chunk_dyads: Optional[int] = None
     device_accum: Optional[bool] = None
     pipeline_depth: int = 2
+    schedule: str = "static"
+    n_executor_devices: Optional[int] = None
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -114,9 +133,21 @@ class EngineConfig:
                                  f"got {self.buckets}")
             prev = b
         if self.chunk_dyads is not None and self.chunk_dyads < 1:
-            raise ValueError("chunk_dyads must be >= 1")
+            raise ValueError(
+                f"chunk_dyads must be >= 1 (got {self.chunk_dyads}); use "
+                "None for the bounded default")
         if self.pipeline_depth < 1:
-            raise ValueError("pipeline_depth must be >= 1")
+            raise ValueError(
+                f"pipeline_depth must be >= 1 (got {self.pipeline_depth}); "
+                "1 = lockstep dispatch, 2 = double buffering")
+        if self.schedule not in SCHEDULES:
+            raise ValueError(f"schedule must be one of {SCHEDULES}, "
+                             f"got {self.schedule!r}")
+        if self.n_executor_devices is not None and self.n_executor_devices < 1:
+            raise ValueError(
+                f"n_executor_devices must be >= 1 (got "
+                f"{self.n_executor_devices}); use None for every visible "
+                "device")
 
     @property
     def acc_jnp_dtype(self):
@@ -138,6 +169,16 @@ class EngineConfig:
     def resolve_device_accum(self) -> bool:
         """Device-resident pipeline on/off; ``None`` means on."""
         return True if self.device_accum is None else self.device_accum
+
+    def resolve_executor_devices(self) -> int:
+        """Executor pool width for the current process: 1 under the
+        static schedule, else ``n_executor_devices`` (``None`` = all)
+        clamped to the visible device count."""
+        if self.schedule != "dynamic":
+            return 1
+        n = (self.n_executor_devices if self.n_executor_devices is not None
+             else len(jax.devices()))
+        return max(1, min(n, len(jax.devices())))
 
     def resolve_interpret(self) -> bool:
         if self.interpret is not None:

@@ -1,0 +1,222 @@
+"""Degree-aware adaptive chunk scheduling across a device pool.
+
+The paper's multicore speedups (56x max) come from OpenMP **dynamic
+scheduling** of degree-skewed dyad work across hardware threads, and its
+GPU results hinge on degree-based load balancing; Dehne & Yogaratnam
+(PAPERS.md) identify per-thread work imbalance as the dominant cost for
+irregular graphs.  This module is the engine's analogue: an
+:class:`Executor` owns a pool of devices and dispatches
+:class:`ChunkTask` descriptors — contiguous spans of the device-resident
+dyad stream, carved by a *cost model* rather than a fixed ``chunk_size``
+(see :func:`repro.core.balance.chunk_bounds_by_cost`) — with a
+work-queue policy:
+
+  * ``schedule="static"`` (default): the single-device in-order loop the
+    engine always ran — bit-identical to the pre-executor engine, with
+    the same double-buffering backpressure (:func:`_throttle`).
+  * ``schedule="dynamic"``: one worker thread per pool device pulls the
+    next task from a shared queue as soon as its previous dispatch
+    clears the pipeline window — the jax analogue of OpenMP
+    ``schedule(dynamic)``.  A device stuck on a heavy-degree chunk
+    simply pulls fewer chunks; no task assignment is precomputed.
+
+Per-device compiled replicas come for free: the plan's chunk unit is one
+``jax.jit`` callable, and jit specializes (and caches) one executable
+per committed input device, so the first task a device pulls compiles
+its replica and every later task reuses it.
+
+Each worker folds its chunks into a device-local int32 hi/lo
+accumulator; the pool merges worker accumulators on the primary device
+(:func:`_merge_accs` — exact integer addition, so the merged totals are
+bit-identical to the static path for any task-to-device assignment) and
+ONE device→host transfer (:func:`_acc_fetch`) completes the run
+regardless of pool size.
+
+Exercise the pool on CPU CI with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# the device accumulator is an int32 (hi, lo) pair: count = hi * 2**30 + lo
+# with 0 <= lo < 2**30 — exact for totals up to 2**61 without enabling x64.
+# Per-fold deltas must stay below 2**30, which holds whenever
+# batch * n < 2**30 (the same order of invariant the int32 scan partials
+# already required; GraphOp kernels promise the same bound).
+_ACC_SHIFT = 30
+
+
+def _acc_update(hi, lo, delta):
+    """Fold a non-negative int32 partial into the hi/lo accumulator."""
+    lo = lo + delta.astype(jnp.int32)
+    carry = lo >> _ACC_SHIFT
+    return hi + carry, lo - (carry << _ACC_SHIFT)
+
+
+def _acc_fetch(plan, hi, lo) -> np.ndarray:
+    """THE device→host transfer of a device-resident run (counted)."""
+    plan.stats["host_syncs"] += 1
+    packed = np.asarray(jnp.stack([hi, lo]), dtype=np.int64)
+    return (packed[0] << _ACC_SHIFT) + packed[1]
+
+
+@jax.jit
+def _merge_accs(hi_t, lo_t, hi_d, lo_d):
+    """Fold one worker's hi/lo pair into the pool total (on the primary
+    device).  ``lo_d < 2**30`` by the accumulator invariant, so it is a
+    valid delta; the hi words add directly.  Pure integer arithmetic —
+    the merged total is exact for any partition of the task stream."""
+    hi_t, lo_t = _acc_update(hi_t, lo_t, lo_d)
+    return hi_t + hi_d, lo_t
+
+
+def _throttle(window: collections.deque, ref, depth: int) -> None:
+    """Double-buffering backpressure: allow ``depth`` chunks in flight.
+
+    Blocks on the dispatch ``depth`` chunks back (a wait, not a transfer)
+    so the device work queue stays bounded while chunk ``k + depth`` is
+    being enqueued as chunk ``k`` computes.
+    """
+    window.append(ref)
+    if len(window) > max(1, depth):
+        window.popleft().block_until_ready()
+
+
+class ChunkTask(NamedTuple):
+    """One schedulable span of the dyad stream: dyads ``[start, end)``,
+    its cost-model-predicted work (drives the executor's balance stats),
+    and an optional static-argument key (the pallas backend stores the
+    bucket tile width ``K`` here so each task dispatches the right
+    kernel specialization)."""
+
+    start: int
+    end: int
+    cost: float = 0.0
+    key: Optional[int] = None
+
+
+class Executor:
+    """A device pool + dispatch policy for one plan's chunk tasks.
+
+    Built by :class:`repro.engine.plan.Plan` from its
+    :class:`~repro.engine.EngineConfig` (``schedule``,
+    ``n_executor_devices``); the distributed backend pins the pool to a
+    single slot because its mesh already owns every device (shard_map is
+    the parallelism there — the executor contributes only the chunk
+    loop).  See the module docstring for the scheduling policies.
+
+    :meth:`run` drives ``step(ctx, hi, lo, task) -> (hi, lo)`` over the
+    task list, where ``ctx = place(device)`` is the backend's
+    device-resident context (graph arrays + dyad stream; ``place(None)``
+    must return the default-placement context unchanged — that keeps the
+    static path free of extra transfers).  Dispatch counts land in
+    ``stats["device_chunks"]`` (``{device index: chunks}``) — the
+    occupancy signal :meth:`repro.serve.CensusService.stats` aggregates.
+    """
+
+    def __init__(self, config, stats: dict, *, n_devices: int = 1):
+        self.schedule = config.schedule
+        self.depth = max(1, config.pipeline_depth)
+        n = max(1, min(n_devices, len(jax.devices())))
+        # a 1-slot pool keeps default placement (device=None): no
+        # device_put, no behavior change vs the pre-executor engine.
+        self.devices = list(jax.devices()[:n]) if n > 1 else [None]
+        self.stats = stats
+
+    @property
+    def n_devices(self) -> int:
+        """Pool width (1 = default-device in-order dispatch)."""
+        return len(self.devices)
+
+    def _bump(self, dev_index: int, count: int) -> None:
+        dc = self.stats.setdefault("device_chunks", {})
+        dc[dev_index] = dc.get(dev_index, 0) + count
+
+    def run(self, tasks, *, place, step, init):
+        """Execute every task; returns the merged (hi, lo) accumulator.
+
+        ``init`` is the run's starting accumulator (it already carries
+        the per-run ``once`` contribution) on default placement; the
+        result is safe to pass to :func:`_acc_fetch`.
+        """
+        tasks = list(tasks)
+        if len(self.devices) == 1:
+            return self._run_inorder(tasks, place, step, init)
+        return self._run_workqueue(tasks, place, step, init)
+
+    # -- static: the pre-executor single-device loop, verbatim ---------------
+
+    def _run_inorder(self, tasks, place, step, init):
+        ctx = place(self.devices[0])
+        hi, lo = init
+        window: collections.deque = collections.deque()
+        for t in tasks:
+            hi, lo = step(ctx, hi, lo, t)
+            self.stats["chunks"] += 1
+            _throttle(window, hi, self.depth)
+        self._bump(0, len(tasks))
+        return hi, lo
+
+    # -- dynamic: worker thread per device, shared task queue ----------------
+
+    def _run_workqueue(self, tasks, place, step, init):
+        queue: collections.deque = collections.deque(tasks)
+        qlock = threading.Lock()
+        accs: list = [None] * len(self.devices)
+        counts = [0] * len(self.devices)
+        errors: list = []
+
+        def worker(i: int, dev) -> None:
+            # XLA execution releases the GIL, so worker threads overlap
+            # on distinct devices; jit compiles this device's replica on
+            # its first task and caches it for the rest of the run.
+            try:
+                ctx = place(dev)
+                acc = jax.device_put((jnp.zeros_like(init[0]),
+                                      jnp.zeros_like(init[1])), dev)
+                window: collections.deque = collections.deque()
+                while True:
+                    with qlock:
+                        if not queue or errors:
+                            break
+                        t = queue.popleft()
+                    hi, lo = step(ctx, *acc, t)
+                    acc = (hi, lo)
+                    counts[i] += 1
+                    _throttle(window, hi, self.depth)
+                accs[i] = acc
+            except BaseException as e:  # noqa: BLE001 — ANY escape must
+                # surface in the caller's thread: a silently dead worker
+                # would otherwise drop every chunk it had folded and the
+                # merged run would under-count with no error raised.
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(i, d), daemon=True)
+                   for i, d in enumerate(self.devices)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            raise errors[0]
+        self.stats["chunks"] += len(tasks)
+        for i, c in enumerate(counts):
+            if c:
+                self._bump(i, c)
+        # merge worker accumulators on the primary device: exact integer
+        # folds, so the result is independent of the task assignment.
+        hi, lo = init
+        primary = self.devices[0]
+        for acc in accs:
+            if acc is None:
+                continue
+            hi_d, lo_d = jax.device_put(acc, primary)
+            hi, lo = _merge_accs(hi, lo, hi_d, lo_d)
+        return hi, lo

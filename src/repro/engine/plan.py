@@ -39,6 +39,7 @@ from ..core.graph import CSRGraph, GraphArrays
 from ..core.graph import next_pow2 as _next_pow2
 from . import backends
 from .config import EngineConfig
+from .executor import Executor
 from .ops import OpLayout, resolve_ops
 
 __all__ = ["CensusPlan", "GraphMeta", "Plan", "compile", "compile_census",
@@ -117,9 +118,19 @@ class Plan:
         self.dyad_pad = max(self.chunk, -(-d_bucket // self.chunk) * self.chunk)
         self.device_path = config.resolve_device_accum()
         self.stats = {"traces": 0, "runs": 0, "chunks": 0, "host_syncs": 0,
-                      "batch_runs": 0, "batch_graphs": 0}
+                      "batch_runs": 0, "batch_graphs": 0, "device_chunks": {}}
+        # chunk dispatch policy + device pool (static 1-slot by default;
+        # the distributed backend's mesh already owns every device, so its
+        # pool is always pinned to one slot).
+        self.executor = Executor(
+            config, self.stats,
+            n_devices=(1 if backend == "distributed"
+                       else config.resolve_executor_devices()))
         self._batch_fn = None  # lazily-built vmapped unit (xla device path)
         self._census_view = None  # memoized CensusPlan compat wrapper
+        # bounded per-graph memo of host-derived chunk schedules
+        # (see repro.engine.backends._memo_tasks)
+        self._task_memo: dict = {}
         # distributed: per-shard load summary of the most recent run
         # (a backends.TaskStats — plans are cached with a bounded LRU, so
         # only the (n_shards,) weights are retained, never the task arrays).
@@ -441,10 +452,14 @@ def compile(graph_meta, ops=("triad_census",),
     backend = config.resolve_backend()
     # normalize: an "auto" config and the explicit backend it resolves to
     # must share one cache entry (and one compiled plan); likewise
-    # device_accum=None and the True it resolves to.
+    # device_accum=None and the True it resolves to, and the executor
+    # pool width None/over-asked resolves to (1 under the static schedule
+    # and on the distributed backend, whose mesh owns every device).
     config = dataclasses.replace(
         config, backend=backend,
-        device_accum=config.resolve_device_accum())
+        device_accum=config.resolve_device_accum(),
+        n_executor_devices=(1 if backend == "distributed"
+                            else config.resolve_executor_devices()))
     if backend == "distributed" and mesh is None:
         mesh = _default_mesh(len(jax.devices()))
     # key on the op *instances* (identity), not their names: re-registering
@@ -496,15 +511,20 @@ def plan_cache_stats() -> dict:
     ``capacity`` plus ``entries``: one dict per cached plan, in LRU order
     (oldest first), holding the bucketized ``meta`` fields, ``backend``,
     ``device_path``, the plan's ``ops`` (op-name tuple), the resolved
-    streaming ``chunk``, and the plan's live execution counters
-    (``runs``, ``batch_runs``, ``batch_graphs``, ``traces``, ``chunks``,
-    ``host_syncs``).  This is the introspection surface
-    :class:`repro.serve.CensusService` reports per-bucket stats from.
+    streaming ``chunk``, the executor policy (``schedule`` and
+    ``n_devices`` — the resolved pool width), and the plan's live
+    execution counters (``runs``, ``batch_runs``, ``batch_graphs``,
+    ``traces``, ``chunks``, ``host_syncs``, plus ``device_chunks``:
+    chunks dispatched per executor pool device).  This is the
+    introspection surface :class:`repro.serve.CensusService` reports
+    per-bucket stats from.
     """
     entries = [
         dict(meta=dataclasses.asdict(p.meta), backend=p.backend,
              device_path=p.device_path, chunk=p.chunk, ops=p.op_names,
-             **p.stats)
+             schedule=p.config.schedule, n_devices=p.executor.n_devices,
+             **{**p.stats,
+                "device_chunks": dict(p.stats["device_chunks"])})
         for p in _PLAN_CACHE.values()
     ]
     return {**_CACHE_STATS, "size": len(_PLAN_CACHE),

@@ -27,11 +27,19 @@ Design properties:
 
 Synchronous by construction: batches execute inside ``submit``/``flush``
 on the caller's thread (device work itself is still async under the
-engine's double-buffered dispatcher).
+engine's double-buffered dispatcher).  One exception: when the engine
+config selects the dynamic executor schedule
+(``CensusConfig(schedule="dynamic")``), :meth:`CensusService.flush`
+drains multi-group backlogs through the executor device pool
+*concurrently* — each (bucket, ops) group runs on its own thread, its
+chunks work-queued over the shared pool, so different buckets occupy
+different devices at the same time.  Per-device chunk occupancy is
+surfaced in :meth:`CensusService.stats`.
 """
 from __future__ import annotations
 
 import dataclasses
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, Iterable, List, NamedTuple, Optional, Tuple
 
 from ..core.graph import CSRGraph
@@ -147,6 +155,7 @@ class CensusService:
         self._completed: List[CensusCompletion] = []
         self._seq = 0
         self._bucket_stats: Dict[GraphMeta, dict] = {}
+        self._device_chunks: Dict[int, int] = {}
 
     # -- request path --------------------------------------------------------
 
@@ -194,9 +203,52 @@ class CensusService:
         return out
 
     def flush(self) -> List[CensusCompletion]:
-        """Execute every pending partial group, then drain completions."""
-        for key in list(self._pending):
-            self._flush_group(key)
+        """Execute every pending partial group, then drain completions.
+
+        Under the engine's dynamic executor schedule a multi-group
+        backlog drains **concurrently**: every group's plan is compiled
+        up front (the plan cache is touched only from this thread), then
+        each group executes on its own thread, its chunks work-queued
+        over the shared executor device pool — different buckets land on
+        different devices at the same time.  Results and completion
+        order are identical to the sequential drain (integer arithmetic;
+        groups are recorded in submission order)."""
+        keys = list(self._pending)
+        if len(keys) > 1 and self.config.census.schedule == "dynamic":
+            # compile every plan BEFORE popping any group (the plan cache
+            # is touched only from this thread, and a compile failure
+            # must leave every request pending, not dropped).
+            plans = {key: compile(key[0], key[1], self.config.census,
+                                  mesh=self.mesh) for key in keys}
+            jobs = []
+            for key in keys:
+                group = self._pending.pop(key)
+                self._first_seq.pop(key)
+                jobs.append((key, group))
+            # cap group concurrency at the executor pool width: more
+            # flush threads than devices only oversubscribes the pool
+            # (each group's executor spawns its own per-device workers)
+            # and multiplies peak device memory by the group count.
+            width = max(p.executor.n_devices for p in plans.values())
+            with ThreadPoolExecutor(
+                    max_workers=min(len(jobs), max(width, 1))) as pool:
+                futs = [pool.submit(self._execute_group, plans[key], group)
+                        for key, group in jobs]
+                outs = [f.result() if not f.exception() else f.exception()
+                        for f in futs]
+            # record every group that finished, THEN surface the first
+            # failure — a bad group must not discard its peers' results.
+            error = None
+            for (key, group), out in zip(jobs, outs):
+                if isinstance(out, BaseException):
+                    error = error or out
+                else:
+                    self._record_group(key, group, out)
+            if error is not None:
+                raise error
+        else:
+            for key in keys:
+                self._flush_group(key)
         return self.poll()
 
     def run_fleet(self, graphs: Iterable[CSRGraph], ops=None) -> List[Any]:
@@ -231,16 +283,38 @@ class CensusService:
         group = self._pending.pop(key)
         self._first_seq.pop(key)
         plan = compile(meta, ops_t, self.config.census, mesh=self.mesh)
-        before_sync = plan.stats["host_syncs"]
-        before_chunks = plan.stats["chunks"]
+        self._record_group(key, group, self._execute_group(plan, group))
+
+    def _execute_group(self, plan, group) -> dict:
+        """Run one group's batch; returns results + the plan-stat deltas.
+
+        Thread-safe against other groups: distinct (bucket, ops) keys
+        map to distinct plans, so concurrent group threads touch
+        disjoint plan state (service bookkeeping stays on the caller's
+        thread — see :meth:`_record_group`)."""
+        before = {k: plan.stats[k] for k in ("host_syncs", "chunks")}
+        before_dev = dict(plan.stats["device_chunks"])
         results = plan.run_batch([g for _, g in group])
+        dev = {d: c - before_dev.get(d, 0)
+               for d, c in plan.stats["device_chunks"].items()
+               if c - before_dev.get(d, 0)}
+        return dict(results=results,
+                    host_syncs=plan.stats["host_syncs"] - before["host_syncs"],
+                    chunks=plan.stats["chunks"] - before["chunks"],
+                    device_chunks=dev)
+
+    def _record_group(self, key, group, out: dict) -> None:
+        meta, ops_t = key
+        results = out["results"]
         if len(ops_t) == 1:  # single-op requests complete with bare results
             results = [r[ops_t[0]] for r in results]
         st = self._bucket_stats[meta]
         st["batches"] += 1
         st["batched_graphs"] += len(group)
-        st["host_syncs"] += plan.stats["host_syncs"] - before_sync
-        st["chunks"] += plan.stats["chunks"] - before_chunks
+        st["host_syncs"] += out["host_syncs"]
+        st["chunks"] += out["chunks"]
+        for d, c in out["device_chunks"].items():
+            self._device_chunks[d] = self._device_chunks.get(d, 0) + c
         self._completed.extend(
             CensusCompletion(rid, res, meta, ops_t)
             for (rid, _), res in zip(group, results))
@@ -256,6 +330,11 @@ class CensusService:
         batches cost, and ``by_ops`` (requests per ops tuple — the
         mixed-analytic split).  ``mean_batch`` is the fleet-wide average
         batch width — the dispatch amortization factor actually achieved.
+        ``devices`` maps executor pool device index → chunks the service
+        dispatched there across all batches (all on device 0 under the
+        default static schedule; spread across the pool under
+        ``CensusConfig(schedule="dynamic")`` — whether the fleet actually
+        fans out over the hardware, measured).
         """
         buckets = {}
         total_batches = total_graphs = 0
@@ -274,4 +353,5 @@ class CensusService:
             mean_batch=(total_graphs / total_batches
                         if total_batches else 0.0),
             buckets=buckets,
+            devices=dict(self._device_chunks),
         )

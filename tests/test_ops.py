@@ -150,13 +150,14 @@ def test_fused_device_path_matches_sync_baseline(backend):
 
 def test_pallas_noncensus_plan_skips_tile_machinery():
     """A pallas plan with no census-kernel op must not pay the tile
-    kernel's support system: no bucket-count control fetch (1 sync, not
-    2) and no transpose CSR — results still match the references."""
+    kernel's support system: no bucket sort, no transpose CSR — results
+    still match the references (and, like every device path, exactly
+    one sync)."""
     g = generators.rmat(6, edge_factor=4, seed=0)
     cfg = EngineConfig(backend="pallas", batch=16, chunk_dyads=64)
     plan = compile(g, ("dyad_census", "degree_stats"), cfg)
     res = plan.run(g)
-    assert plan.stats["host_syncs"] == 1  # census plans pay 2
+    assert plan.stats["host_syncs"] == 1
     arrays = plan.padded_arrays(g)
     assert arrays.in_ptr is None  # transpose CSR skipped
     for name in ("dyad_census", "degree_stats"):

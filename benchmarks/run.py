@@ -584,6 +584,102 @@ def bench_executor(scale: float, *, smoke: bool = False,
     print(f"# wrote {out}")
 
 
+def bench_delta(scale: float, *, smoke: bool = False,
+                out: str = "BENCH_census.json"):
+    """``--delta``: incremental delta census vs full recompute.
+
+    Mutates the largest bench graph with edge deltas of growing footprint
+    and times ``plan.apply_delta`` (subset passes over old + new affected
+    dyads, one sync) against ``plan.run_raw`` on the mutated graph (both
+    warm).  Then drives a subscribed ``CensusService`` session through a
+    stream of small mutations and compares mutations/sec against
+    resubmitting each mutated graph as a fresh stateless request.
+    Results merge into ``BENCH_census.json`` under ``"delta"``:
+    per-footprint rows with ``affected_fraction`` and ``speedup``, plus
+    the session-vs-resubmission rate.
+    """
+    from repro.core import generators
+    from repro.core.delta import GraphDelta, apply_delta_csr
+    from repro.engine import EngineConfig, clear_plan_cache, compile
+    from repro.serve import CensusService, ServiceConfig
+
+    if smoke:
+        g = generators.rmat(10, edge_factor=8, seed=0)
+        chunk, reps, footprints = 512, 3, (4, 32, 256)
+    else:
+        g = generators.rmat(13, edge_factor=8, seed=0)
+        chunk, reps, footprints = 2048, 4, (4, 64, 1024)
+    clear_plan_cache()
+    cfg = EngineConfig(backend="xla", batch=256, chunk_dyads=chunk,
+                       delta_threshold=1.0)  # never fall back: measure it
+    plan = compile(g, ("triad_census",), cfg)
+    raw = plan.run_raw(g)
+    rng = np.random.default_rng(0)
+
+    def footprint_delta(k):
+        # k removals of existing arcs + k random additions
+        out_ptr = np.asarray(g.arrays.out_ptr)[: g.n + 1]
+        dst = np.asarray(g.arrays.out_idx)[: g.m].astype(np.int64)
+        src = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(out_ptr))
+        sel = rng.choice(g.m, size=min(k, g.m), replace=False)
+        return GraphDelta(edges_added=rng.integers(0, g.n, size=(k, 2)),
+                          edges_removed=np.stack([src[sel], dst[sel]], 1))
+
+    rows = []
+    for k in footprints:
+        d = footprint_delta(k)
+        g_new = apply_delta_csr(g, d)
+        plan.run_raw(g_new)                      # warm the full path
+        res = plan.apply_delta(g, d, raw)        # warm the delta path
+        assert res.mode == "delta" and (res.raw == plan.run_raw(g_new)).all()
+        t_delta = t_full = float("inf")
+        for _ in range(reps):                    # interleaved min-of-reps
+            t0 = time.perf_counter()
+            plan.apply_delta(g, d, raw)
+            t_delta = min(t_delta, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            plan.run_raw(g_new)
+            t_full = min(t_full, time.perf_counter() - t0)
+        row = dict(footprint_arcs=int(d.size),
+                   affected_fraction=res.affected_fraction,
+                   delta_s=t_delta, full_s=t_full,
+                   speedup=t_full / max(t_delta, 1e-9))
+        rows.append(row)
+        print(f"census_delta_{k}arcs,{t_delta * 1e6:.0f},"
+              f"affected={row['affected_fraction']:.4f}"
+              f",vs_full={row['speedup']:.2f}x")
+
+    # subscribed session stream vs stateless resubmission of each snapshot
+    n_mut = 8 if smoke else 16
+    deltas = [footprint_delta(4) for _ in range(n_mut)]
+    svc = CensusService(ServiceConfig(census=cfg))
+    sid = svc.subscribe(g)
+    t0 = time.perf_counter()
+    for d in deltas:
+        svc.mutate(sid, d)
+    svc.poll(sid)
+    t_sess = time.perf_counter() - t0
+    svc.unsubscribe(sid)
+    cur = g
+    t0 = time.perf_counter()
+    for d in deltas:
+        cur = apply_delta_csr(cur, d)
+        svc.submit(cur)
+        svc.flush()
+    t_resub = time.perf_counter() - t0
+    session = dict(mutations=n_mut,
+                   session_mut_per_sec=n_mut / max(t_sess, 1e-9),
+                   resubmit_req_per_sec=n_mut / max(t_resub, 1e-9),
+                   speedup=t_resub / max(t_sess, 1e-9))
+    print(f"census_delta_session,{t_sess / n_mut * 1e6:.0f},"
+          f"vs_resubmission={session['speedup']:.2f}x")
+    _merge_json(out, schema=1, jax_backend=jax.default_backend(),
+                delta=dict(smoke=smoke,
+                           graph=dict(n=g.n, m=g.m, dyads=g.n_dyads),
+                           results=rows, session=session))
+    print(f"# wrote {out}")
+
+
 def bench_lm_smoke(scale: float):
     """Framework-side: smoke-scale train-step latency per arch."""
     from repro.config import RunConfig, get_config, list_configs
@@ -626,6 +722,11 @@ def main() -> None:
                          "1 vs N virtual devices (merges an 'executor' "
                          "section into the JSON; re-execs itself under "
                          "forced 8 host devices when needed)")
+    ap.add_argument("--delta", action="store_true",
+                    help="delta bench: incremental apply_delta vs full "
+                         "recompute across mutation footprints, plus "
+                         "subscribed-session vs resubmission rates "
+                         "(merges a 'delta' section into the JSON)")
     ap.add_argument("--sync-baseline", action="store_true",
                     help="also time the synchronous (device_accum=False) "
                          "data path for an A/B speedup in the JSON")
@@ -647,6 +748,9 @@ def main() -> None:
     if args.executor:
         bench_executor(args.scale, smoke=args.smoke, out=args.out)
         return
+    if args.delta:
+        bench_delta(args.scale, smoke=args.smoke, out=args.out)
+        return
     if args.smoke:
         device_pipeline(args.scale)
         return
@@ -661,6 +765,7 @@ def main() -> None:
         "serve": lambda s: bench_serve(s, smoke=False, out=args.out),
         "ops": lambda s: bench_ops(s, smoke=False, out=args.out),
         "executor": lambda s: bench_executor(s, smoke=False, out=args.out),
+        "delta": lambda s: bench_delta(s, smoke=False, out=args.out),
         "lm_smoke": bench_lm_smoke,
     }
     only = [s for s in args.only.split(",") if s]

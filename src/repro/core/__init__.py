@@ -8,6 +8,7 @@ remain as deprecated shims over the engine.
 from .census import (CensusResult, brute_force_census, canonical_dyads,
                      make_census_fn, triad_census)
 from .balance import ShardedTasks, dyad_weights, exact_s_sizes, pack_tasks
+from .delta import GraphDelta, affected_dyads, apply_delta_csr
 from .distributed import distributed_triad_census, make_distributed_census_fn
 from .graph import (CSRGraph, GraphArrays, from_edges,
                     load_pajek_or_edgelist, stack_graph_arrays)
@@ -17,11 +18,12 @@ _ENGINE_EXPORTS = ("CensusConfig", "CensusPlan", "GraphMeta",
                    "clear_plan_cache", "compile_census", "plan_cache_stats")
 
 __all__ = [
-    "CensusResult", "CSRGraph", "GraphArrays", "ShardedTasks", "TRIAD_NAMES",
-    "TRIAD_TABLE_64", "brute_force_census", "canonical_dyads",
-    "distributed_triad_census", "dyad_weights", "exact_s_sizes", "from_edges",
-    "load_pajek_or_edgelist", "make_census_fn", "make_distributed_census_fn",
-    "pack_tasks", "stack_graph_arrays", "triad_census", *_ENGINE_EXPORTS,
+    "CensusResult", "CSRGraph", "GraphArrays", "GraphDelta", "ShardedTasks",
+    "TRIAD_NAMES", "TRIAD_TABLE_64", "affected_dyads", "apply_delta_csr",
+    "brute_force_census", "canonical_dyads", "distributed_triad_census",
+    "dyad_weights", "exact_s_sizes", "from_edges", "load_pajek_or_edgelist",
+    "make_census_fn", "make_distributed_census_fn", "pack_tasks",
+    "stack_graph_arrays", "triad_census", *_ENGINE_EXPORTS,
 ]
 
 

@@ -48,17 +48,22 @@ Architecture walk-through: ``docs/ARCHITECTURE.md``; paper-concept index:
 ``docs/PAPER_MAPPING.md``.
 """
 from ..core.census import CensusResult
+from ..core.delta import GraphDelta, affected_dyads, apply_delta_csr
 from .config import BACKENDS, SCHEDULES, CensusConfig, EngineConfig
+from .delta import DeltaResult, delta_correction
 from .executor import ChunkTask, Executor
 from .ops import (DegreeStats, DyadCensus, GraphOp, TriadicProfile, get_op,
                   list_ops, register_op)
-from .plan import (CensusPlan, GraphMeta, Plan, clear_plan_cache, compile,
-                   compile_census, plan_cache_stats, set_plan_cache_capacity)
+from .plan import (CensusPlan, GraphMeta, Plan, PlanShapeError,
+                   clear_plan_cache, compile, compile_census,
+                   plan_cache_stats, set_plan_cache_capacity)
 
 __all__ = [
     "BACKENDS", "CensusConfig", "CensusPlan", "CensusResult", "ChunkTask",
-    "DegreeStats", "DyadCensus", "EngineConfig", "Executor", "GraphMeta",
-    "GraphOp", "Plan", "SCHEDULES", "TriadicProfile", "clear_plan_cache",
-    "compile", "compile_census", "get_op", "list_ops", "plan_cache_stats",
-    "register_op", "set_plan_cache_capacity",
+    "DegreeStats", "DeltaResult", "DyadCensus", "EngineConfig", "Executor",
+    "GraphDelta", "GraphMeta", "GraphOp", "Plan", "PlanShapeError",
+    "SCHEDULES", "TriadicProfile", "affected_dyads", "apply_delta_csr",
+    "clear_plan_cache", "compile", "compile_census", "delta_correction",
+    "get_op", "list_ops", "plan_cache_stats", "register_op",
+    "set_plan_cache_capacity",
 ]

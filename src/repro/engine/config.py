@@ -91,6 +91,14 @@ class EngineConfig:
             whose mesh already owns every device.  Exercise multi-device
             pools on CPU via
             ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+        delta_threshold: incremental-census cost-model cutoff, in
+            ``(0, 1]``.  ``Plan.apply_delta`` runs the affected-subset
+            correction only while the mutation footprint (affected dyads
+            over the larger dyad stream) stays at or below this
+            fraction; above it the full pass is cheaper and runs
+            instead.  The default ``0.5`` is the delta pass's break-even
+            — it walks the affected set twice, once per graph version.
+            ``1.0`` always prefers the delta path.
     """
 
     backend: str = "auto"
@@ -107,6 +115,7 @@ class EngineConfig:
     pipeline_depth: int = 2
     schedule: str = "static"
     n_executor_devices: Optional[int] = None
+    delta_threshold: float = 0.5
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -148,6 +157,14 @@ class EngineConfig:
                 f"n_executor_devices must be >= 1 (got "
                 f"{self.n_executor_devices}); use None for every visible "
                 "device")
+        if not (0.0 < float(self.delta_threshold) <= 1.0):
+            raise ValueError(
+                f"delta_threshold must be in (0, 1] (got "
+                f"{self.delta_threshold}); it is the affected-dyad "
+                "fraction above which apply_delta falls back to a full "
+                "recompute — 1.0 always prefers the delta path")
+        object.__setattr__(self, "delta_threshold",
+                           float(self.delta_threshold))
 
     @property
     def acc_jnp_dtype(self):

@@ -129,6 +129,18 @@ class GraphOp:
     name: str = ""
     bins: int = 0
     kernel_key: Optional[str] = None  # None -> own kernel, keyed by name
+    #: Locality contract for the incremental delta engine
+    #: (:mod:`repro.engine.delta`).  ``True`` promises that the batch
+    #: kernel's contribution for a dyad ``(u, v)`` depends only on ``n``
+    #: and the arcs between ``{u, v}`` and ``{u, v} ∪ N(u) ∪ N(v)`` (and
+    #: that any ``once`` contribution is a whole-graph function the delta
+    #: pass may recompute outright — it is, both versions are folded).
+    #: Every built-in op satisfies this — their kernels only probe the
+    #: dyad's own arcs and membership against the open neighborhoods.  An
+    #: op whose kernel reads structure beyond that horizon must set
+    #: ``False``; ``Plan.apply_delta`` then always takes the full-recompute
+    #: path, which is correct for any op.
+    delta_local: bool = True
 
     def make_batch_fn(self, meta, config) -> Optional[Callable]:
         """Build the per-chunk device kernel, or ``None`` if the op has no

@@ -42,8 +42,18 @@ from .config import EngineConfig
 from .executor import Executor
 from .ops import OpLayout, resolve_ops
 
-__all__ = ["CensusPlan", "GraphMeta", "Plan", "compile", "compile_census",
-           "clear_plan_cache", "plan_cache_stats", "set_plan_cache_capacity"]
+__all__ = ["CensusPlan", "GraphMeta", "Plan", "PlanShapeError", "compile",
+           "compile_census", "clear_plan_cache", "plan_cache_stats",
+           "set_plan_cache_capacity"]
+
+
+class PlanShapeError(ValueError):
+    """A graph exceeds the plan's metadata buckets (tile width or array
+    bounds) — recompile via :func:`repro.engine.compile` at the graph's
+    own shape.  Subclasses ``ValueError`` so pre-existing handlers keep
+    working; exists as its own type so stateful callers (the serve
+    layer's subscribed sessions) can tell "this graph outgrew its plan,
+    recompile" apart from genuinely invalid input."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,7 +128,8 @@ class Plan:
         self.dyad_pad = max(self.chunk, -(-d_bucket // self.chunk) * self.chunk)
         self.device_path = config.resolve_device_accum()
         self.stats = {"traces": 0, "runs": 0, "chunks": 0, "host_syncs": 0,
-                      "batch_runs": 0, "batch_graphs": 0, "device_chunks": {}}
+                      "batch_runs": 0, "batch_graphs": 0, "device_chunks": {},
+                      "delta_runs": 0, "delta_fulls": 0}
         # chunk dispatch policy + device pool (static 1-slot by default;
         # the distributed backend's mesh already owns every device, so its
         # pool is always pinned to one slot).
@@ -159,11 +170,11 @@ class Plan:
     def _check(self, g: CSRGraph):
         m = self.meta
         if g.max_deg > m.k:
-            raise ValueError(
+            raise PlanShapeError(
                 f"graph max_deg={g.max_deg} exceeds plan tile width k={m.k}; "
                 f"recompile via repro.engine.compile(graph, ops, config)")
         if g.n > m.n_bucket or g.m > m.m_out_bucket or g.m_nbr > m.m_nbr_bucket:
-            raise ValueError(
+            raise PlanShapeError(
                 f"graph (n={g.n}, m={g.m}, m_nbr={g.m_nbr}) exceeds plan "
                 f"buckets {m}; recompile via repro.engine.compile(graph, "
                 f"ops, config)")
@@ -227,9 +238,44 @@ class Plan:
         through the single-graph (un-vmapped) units, which produce
         bit-identical raw bins — every op is pure integer arithmetic.
         """
+        return self.layout.finalize(self.run_raw(g), g)
+
+    def run_raw(self, g: CSRGraph) -> np.ndarray:
+        """Execute the fused pass and return the raw int64 accumulator bins
+        (no per-op finalize).  This is the state a delta-census stream
+        carries between mutations: seed a session with ``raw =
+        plan.run_raw(g)``, then advance it with :meth:`apply_delta` —
+        ``layout.finalize(raw, g)`` recovers the per-op results at any
+        point.  Counts as one run (same stats/sync accounting as
+        :meth:`run`)."""
         self._check(g)
         self.stats["runs"] += 1
-        return self.layout.finalize(self._run_raw(g), g)
+        return self._run_raw(g)
+
+    def apply_delta(self, g: CSRGraph, delta, raw=None) -> "DeltaResult":
+        """Advance a census stream by one mutation batch — work
+        proportional to the delta's footprint, not the graph.
+
+        ``g`` is the current graph and ``raw`` its raw bins (from
+        :meth:`run_raw` or the previous application's ``.raw``); ``delta``
+        is a :class:`~repro.core.delta.GraphDelta`.  Returns a
+        :class:`~repro.engine.delta.DeltaResult` whose ``graph`` / ``raw``
+        seed the next application and whose ``results`` are bit-identical
+        to ``plan.run(result.graph)`` — the correction pass re-runs the
+        plan's own chunk machinery on the affected dyads of both graphs
+        and folds the exact integer difference (module
+        :mod:`repro.engine.delta`), costing ONE counted device→host sync.
+        Falls back to a full recompute (``mode == "full"``) when ``raw``
+        is ``None``, the affected fraction exceeds
+        ``config.delta_threshold``, the plan runs the synchronous
+        baseline, or an op opts out via ``delta_local=False``.  Raises
+        :class:`PlanShapeError` if the mutated graph outgrows the plan's
+        buckets — recompile at the new shape and rerun.
+        """
+        from .delta import run_delta
+        self._check(g)
+        self.stats["runs"] += 1
+        return run_delta(self, g, delta, raw)
 
     def _run_raw(self, g: CSRGraph) -> np.ndarray:
         """Backend dispatch: the fused raw int64 bins (no finalize)."""
@@ -498,8 +544,14 @@ def clear_plan_cache() -> None:
     """Drop every cached plan and reset hit/miss/eviction counters.
 
     Compiled XLA executables owned by the dropped plans become garbage;
-    use in tests/benchmarks to force cold compiles.
+    use in tests/benchmarks to force cold compiles.  Each plan's
+    per-graph chunk-schedule memo (``_task_memo`` — the host-derived
+    pallas bucket schedules and cost-model boundaries) is cleared too:
+    the memo's lifetime is tied to the plan cache, so long-lived mutation
+    streams can drop every host-side schedule with one call.
     """
+    for p in _PLAN_CACHE.values():
+        p._task_memo.clear()
     _PLAN_CACHE.clear()
     _CACHE_STATS.update(hits=0, misses=0, evictions=0)
 
@@ -514,15 +566,19 @@ def plan_cache_stats() -> dict:
     streaming ``chunk``, the executor policy (``schedule`` and
     ``n_devices`` — the resolved pool width), and the plan's live
     execution counters (``runs``, ``batch_runs``, ``batch_graphs``,
-    ``traces``, ``chunks``, ``host_syncs``, plus ``device_chunks``:
-    chunks dispatched per executor pool device).  This is the
-    introspection surface :class:`repro.serve.CensusService` reports
-    per-bucket stats from.
+    ``traces``, ``chunks``, ``host_syncs``, ``delta_runs`` /
+    ``delta_fulls`` — incremental applications split by path — plus
+    ``device_chunks``: chunks dispatched per executor pool device, and
+    ``task_memo``: live entries in the plan's bounded per-graph
+    chunk-schedule memo, cleared with the cache by
+    :func:`clear_plan_cache`).  This is the introspection surface
+    :class:`repro.serve.CensusService` reports per-bucket stats from.
     """
     entries = [
         dict(meta=dataclasses.asdict(p.meta), backend=p.backend,
              device_path=p.device_path, chunk=p.chunk, ops=p.op_names,
              schedule=p.config.schedule, n_devices=p.executor.n_devices,
+             task_memo=len(p._task_memo),
              **{**p.stats,
                 "device_chunks": dict(p.stats["device_chunks"])})
         for p in _PLAN_CACHE.values()

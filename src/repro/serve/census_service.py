@@ -35,6 +35,20 @@ drains multi-group backlogs through the executor device pool
 chunks work-queued over the shared pool, so different buckets occupy
 different devices at the same time.  Per-device chunk occupancy is
 surfaced in :meth:`CensusService.stats`.
+
+Beyond the stateless request stream, the service also runs **subscribed
+sessions** — the evolving-graph mode (Chin et al.'s workload is edge
+traffic, not whole-graph resubmission): :meth:`CensusService.subscribe`
+pins a graph and its ops, clients stream
+:meth:`~CensusService.mutate`\\ (session,
+:class:`~repro.core.delta.GraphDelta`) and read fresh counts with
+:meth:`~CensusService.poll`\\ (session) at any time.  Each mutation rides
+``Plan.apply_delta`` — work proportional to the mutation footprint, one
+device→host sync — falling back to a full recompute past the
+``delta_threshold`` cost model, and transparently recompiling (plan
+cache — other sessions in the same bucket share it) when a mutation
+outgrows the session plan's metadata buckets.  Per-session delta / full
+/ recompile counters surface in :meth:`CensusService.stats`.
 """
 from __future__ import annotations
 
@@ -42,8 +56,9 @@ import dataclasses
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, Iterable, List, NamedTuple, Optional, Tuple
 
+from ..core.delta import GraphDelta, apply_delta_csr
 from ..core.graph import CSRGraph
-from ..engine import CensusConfig, GraphMeta, compile
+from ..engine import CensusConfig, GraphMeta, PlanShapeError, compile
 from ..engine.ops import get_op, resolve_ops
 
 __all__ = ["CensusCompletion", "CensusService", "ServiceConfig"]
@@ -97,17 +112,26 @@ class ServiceConfig:
             executes under — together with the request's (bucket, ops)
             key it pins the plan-cache entry, so one service maps to at
             most one cached plan per (bucket, ops) group.
+        max_sessions: cap on concurrently subscribed evolving-graph
+            sessions (:meth:`CensusService.subscribe`).  Each live
+            session pins its current graph, raw accumulator bins and a
+            plan-cache reference, so the cap bounds the service's
+            resident state; ``subscribe`` past it raises until a session
+            is :meth:`~CensusService.unsubscribe`\\ d.
     """
 
     max_batch: int = 8
     max_wait_requests: int = 64
     census: CensusConfig = dataclasses.field(default_factory=CensusConfig)
+    max_sessions: int = 64
 
     def __post_init__(self):
         if self.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if self.max_wait_requests < 0:
             raise ValueError("max_wait_requests must be >= 0")
+        if self.max_sessions < 1:
+            raise ValueError("max_sessions must be >= 1")
 
 
 class CensusCompletion(NamedTuple):
@@ -122,6 +146,20 @@ class CensusCompletion(NamedTuple):
     result: Any
     meta: GraphMeta
     ops: Tuple[str, ...] = _DEFAULT_OPS
+
+
+@dataclasses.dataclass
+class _Session:
+    """One subscribed evolving graph: its current state + plan + counters."""
+
+    graph: CSRGraph
+    ops: Tuple[str, ...]
+    plan: Any
+    raw: Any  # (total_bins,) int64 — the plan's raw fused accumulator
+    mutations: int = 0
+    deltas: int = 0      # mutations served by the affected-subset path
+    fulls: int = 0       # mutations that fell back to a full recompute
+    recompiles: int = 0  # mutations that outgrew the plan's buckets
 
 
 class CensusService:
@@ -156,6 +194,8 @@ class CensusService:
         self._seq = 0
         self._bucket_stats: Dict[GraphMeta, dict] = {}
         self._device_chunks: Dict[int, int] = {}
+        self._sessions: Dict[int, _Session] = {}
+        self._session_seq = 0
 
     # -- request path --------------------------------------------------------
 
@@ -194,13 +234,99 @@ class CensusService:
             self._flush_group(stale)
         return rid
 
-    def poll(self) -> List[CensusCompletion]:
-        """Drain and return completions accumulated since the last poll.
+    def poll(self, session: Optional[int] = None):
+        """Without arguments: drain and return completions accumulated
+        since the last poll (order is batch flush order — generally NOT
+        submission order; match on ``request_id``).
 
-        Order is batch flush order — generally NOT submission order; match
-        on ``request_id``."""
+        With a ``session`` id (from :meth:`subscribe`): the subscribed
+        graph's fresh analytics — finalized from the session's cached raw
+        accumulator bins, so polling costs host-side closed forms only,
+        no device work.  Single-op sessions return the bare result object
+        (a ``CensusResult`` for the census default), multi-op sessions
+        the ``{op_name: result}`` dict — same unwrapping as request
+        completions."""
+        if session is not None:
+            return self._session_results(self._session(session))
         out, self._completed = self._completed, []
         return out
+
+    # -- subscribed evolving-graph sessions ----------------------------------
+
+    def _session(self, session: int) -> _Session:
+        try:
+            return self._sessions[session]
+        except KeyError:
+            raise KeyError(f"unknown session {session!r}; live sessions: "
+                           f"{sorted(self._sessions)}") from None
+
+    def _session_results(self, s: _Session):
+        results = s.plan.layout.finalize(s.raw, s.graph)
+        return results[s.ops[0]] if len(s.ops) == 1 else results
+
+    def subscribe(self, graph: CSRGraph, ops=None) -> int:
+        """Pin an evolving graph; returns its session id.
+
+        The session compiles (or reuses from the plan cache) the fused
+        plan for ``(graph bucket, ops)``, runs one full pass to seed the
+        raw accumulator state, and is then ready to take
+        :meth:`mutate` streams; :meth:`poll`\\ (session) reads fresh
+        counts at any time.  ``ops`` follows :meth:`submit`'s convention
+        (``None`` = census only).  Raises once
+        ``ServiceConfig.max_sessions`` sessions are live."""
+        ops_t = _normalize_ops(ops)
+        if len(self._sessions) >= self.config.max_sessions:
+            raise RuntimeError(
+                f"session limit reached (max_sessions="
+                f"{self.config.max_sessions}); unsubscribe() a session "
+                "before subscribing another graph")
+        plan = compile(graph, ops_t, self.config.census, mesh=self.mesh)
+        sid = self._session_seq
+        self._session_seq += 1
+        self._sessions[sid] = _Session(graph=graph, ops=ops_t, plan=plan,
+                                       raw=plan.run_raw(graph))
+        return sid
+
+    def mutate(self, session: int, delta: GraphDelta) -> dict:
+        """Apply one mutation batch to a subscribed graph.
+
+        Rides ``Plan.apply_delta``: the affected-subset correction (work
+        proportional to the delta's footprint, ONE device→host sync) when
+        the mutation is local enough, the plan's full pass otherwise
+        (``delta_threshold`` cost model) — results are bit-identical
+        either way.  A mutation that outgrows the session plan's metadata
+        buckets (degree or arc-count growth past the bucketized shape)
+        transparently recompiles through the plan cache at the new shape
+        and reseeds with one full pass.  Returns an ack dict: ``mode``
+        (``"delta"`` | ``"full"`` | ``"recompile"``),
+        ``affected_fraction``, and the new ``n`` / ``m``; read the fresh
+        counts with :meth:`poll`\\ (session)."""
+        s = self._session(session)
+        try:
+            out = s.plan.apply_delta(s.graph, delta, s.raw)
+            s.graph, s.raw = out.graph, out.raw
+            mode, frac = out.mode, out.affected_fraction
+            if mode == "delta":
+                s.deltas += 1
+            else:
+                s.fulls += 1
+        except PlanShapeError:
+            g_new = apply_delta_csr(s.graph, delta)
+            s.plan = compile(g_new, s.ops, self.config.census,
+                             mesh=self.mesh)
+            s.graph, s.raw = g_new, s.plan.run_raw(g_new)
+            s.recompiles += 1
+            mode, frac = "recompile", 1.0
+        s.mutations += 1
+        return dict(session=session, mode=mode, affected_fraction=frac,
+                    n=s.graph.n, m=s.graph.m)
+
+    def unsubscribe(self, session: int):
+        """End a session, freeing its ``max_sessions`` slot; returns the
+        final analytics (same shape :meth:`poll`\\ (session) returns)."""
+        s = self._session(session)
+        del self._sessions[session]
+        return self._session_results(s)
 
     def flush(self) -> List[CensusCompletion]:
         """Execute every pending partial group, then drain completions.
@@ -334,7 +460,13 @@ class CensusService:
         dispatched there across all batches (all on device 0 under the
         default static schedule; spread across the pool under
         ``CensusConfig(schedule="dynamic")`` — whether the fleet actually
-        fans out over the hardware, measured).
+        fans out over the hardware, measured).  ``sessions`` maps each
+        live subscribed-session id to its mutation counters —
+        ``mutations`` split into ``deltas`` (affected-subset path),
+        ``fulls`` (cost-model fallback) and ``recompiles`` (bucket
+        outgrowth) — plus the session's current graph size and ops; the
+        delta/full split is the incremental engine's hit rate, the number
+        that says whether the mutation stream is actually local.
         """
         buckets = {}
         total_batches = total_graphs = 0
@@ -354,4 +486,8 @@ class CensusService:
                         if total_batches else 0.0),
             buckets=buckets,
             devices=dict(self._device_chunks),
+            sessions={sid: dict(mutations=s.mutations, deltas=s.deltas,
+                                fulls=s.fulls, recompiles=s.recompiles,
+                                n=s.graph.n, m=s.graph.m, ops=s.ops)
+                      for sid, s in self._sessions.items()},
         )

@@ -680,6 +680,77 @@ def bench_delta(scale: float, *, smoke: bool = False,
     print(f"# wrote {out}")
 
 
+def bench_faults(scale: float, *, smoke: bool = False,
+                 out: str = "BENCH_census.json"):
+    """``--faults``: the robustness tax, measured.
+
+    Times three warm census variants on the same graph: (a) *baseline* —
+    an explicitly inert ``FaultPlan`` (injection checks compiled out of
+    the dispatch path, the production default), (b) *armed* — a live
+    fault plan whose faults can never fire (a dead device index far past
+    the pool), paying only the per-dispatch decision hashes, and (c)
+    *recovering* — seeded chunk chaos where every selected chunk fails
+    once and retries (``fail_attempts=1``), measuring what actual
+    recovery costs.  All three produce bit-identical counts in one
+    device→host sync.  Results merge into ``BENCH_census.json`` under
+    ``"faults"`` with ``armed_overhead_pct`` (the fault-free tax — the
+    acceptance bar is < 5%) and ``recovery_tax_pct``.
+    """
+    from repro.core import generators
+    from repro.engine import (EngineConfig, FaultPlan, clear_plan_cache,
+                              compile)
+
+    if smoke:
+        g = generators.rmat(10, edge_factor=8, seed=0)
+        chunk, reps = 512, 5
+    else:
+        g = generators.rmat(13, edge_factor=8, seed=0)
+        chunk, reps = 2048, 6
+    cases = [
+        ("baseline", FaultPlan()),
+        ("armed", FaultPlan(seed=3, device_loss=(99,))),
+        ("recovering", FaultPlan(seed=3, chunk_failure_rate=0.25,
+                                 fail_attempts=1)),
+    ]
+    clear_plan_cache()
+    plans, baseline = [], None
+    for _, fp in cases:
+        cfg = EngineConfig(backend="xla", batch=256, chunk_dyads=chunk,
+                           fault_plan=fp)
+        plan = compile(g, ("triad_census",), cfg)
+        ref = plan.run(g)["triad_census"].counts  # warm + correctness
+        baseline = ref if baseline is None else baseline
+        assert (ref == baseline).all()  # recovery is bit-identical
+        assert plan.stats["host_syncs"] == plan.stats["runs"]
+        plans.append(plan)
+    assert plans[-1].stats["faults"]["retries"] > 0  # chaos actually fired
+    warms = [float("inf")] * len(plans)
+    for _ in range(reps):  # interleaved min-of-reps (noisy-neighbor box)
+        for i, plan in enumerate(plans):
+            t0 = time.perf_counter()
+            plan.run(g)
+            warms[i] = min(warms[i], time.perf_counter() - t0)
+    rows = []
+    for (name, _), plan, warm in zip(cases, plans, warms):
+        row = dict(case=name, warm_s=warm,
+                   dyads_per_sec=g.n_dyads / max(warm, 1e-9),
+                   retries_per_run=(plan.stats["faults"]["retries"]
+                                    // plan.stats["runs"]))
+        rows.append(row)
+        print(f"census_faults_{name},{warm * 1e6:.0f},"
+              f"retries_per_run={row['retries_per_run']}")
+    armed_pct = 100.0 * (warms[1] - warms[0]) / max(warms[0], 1e-9)
+    tax_pct = 100.0 * (warms[2] - warms[0]) / max(warms[0], 1e-9)
+    print(f"census_faults_overhead,0,armed={armed_pct:.1f}%"
+          f",recovering={tax_pct:.1f}%")
+    _merge_json(out, schema=1, jax_backend=jax.default_backend(),
+                faults=dict(smoke=smoke,
+                            graph=dict(n=g.n, m=g.m, dyads=g.n_dyads),
+                            results=rows, armed_overhead_pct=armed_pct,
+                            recovery_tax_pct=tax_pct))
+    print(f"# wrote {out}")
+
+
 def bench_lm_smoke(scale: float):
     """Framework-side: smoke-scale train-step latency per arch."""
     from repro.config import RunConfig, get_config, list_configs
@@ -727,6 +798,11 @@ def main() -> None:
                          "recompute across mutation footprints, plus "
                          "subscribed-session vs resubmission rates "
                          "(merges a 'delta' section into the JSON)")
+    ap.add_argument("--faults", action="store_true",
+                    help="robustness bench: inert vs armed vs recovering "
+                         "fault plans — the fault-free overhead and the "
+                         "recovery tax (merges a 'faults' section into "
+                         "the JSON)")
     ap.add_argument("--sync-baseline", action="store_true",
                     help="also time the synchronous (device_accum=False) "
                          "data path for an A/B speedup in the JSON")
@@ -751,6 +827,9 @@ def main() -> None:
     if args.delta:
         bench_delta(args.scale, smoke=args.smoke, out=args.out)
         return
+    if args.faults:
+        bench_faults(args.scale, smoke=args.smoke, out=args.out)
+        return
     if args.smoke:
         device_pipeline(args.scale)
         return
@@ -766,6 +845,7 @@ def main() -> None:
         "ops": lambda s: bench_ops(s, smoke=False, out=args.out),
         "executor": lambda s: bench_executor(s, smoke=False, out=args.out),
         "delta": lambda s: bench_delta(s, smoke=False, out=args.out),
+        "faults": lambda s: bench_faults(s, smoke=False, out=args.out),
         "lm_smoke": bench_lm_smoke,
     }
     only = [s for s in args.only.split(",") if s]

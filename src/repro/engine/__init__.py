@@ -44,6 +44,19 @@ cache entries, bit-identical results.  The legacy entry points
 ``triad_census``, ``triad_census_kernel`` and
 ``distributed_triad_census`` are deprecated shims over this module.
 
+Execution is fault tolerant (:mod:`repro.engine.faults`,
+:mod:`repro.engine.executor`): a seeded deterministic
+:class:`FaultPlan` — threaded in via ``EngineConfig(fault_plan=...)`` or
+the ``REPRO_FAULT_PLAN`` environment hook — injects chunk-kernel
+failures, simulated device loss, compile/runtime failures and slow
+chunks with no wall clocks or runtime randomness, so every failing run
+replays exactly.  Chunk kernels are functional, so bounded retry
+(``max_attempts``), re-queue onto surviving pool devices, and
+repeated-failure device quarantine recover **bit-identically** to the
+fault-free run in one device→host sync; a graceful-degradation ladder
+(pallas→xla on compile/runtime failure, dynamic→static on pool
+exhaustion) is recorded in ``Plan.degradation``.
+
 Architecture walk-through: ``docs/ARCHITECTURE.md``; paper-concept index:
 ``docs/PAPER_MAPPING.md``.
 """
@@ -51,7 +64,11 @@ from ..core.census import CensusResult
 from ..core.delta import GraphDelta, affected_dyads, apply_delta_csr
 from .config import BACKENDS, SCHEDULES, CensusConfig, EngineConfig
 from .delta import DeltaResult, delta_correction
-from .executor import ChunkTask, Executor
+from .executor import (ChunkRetryError, ChunkTask, Executor,
+                       PoolExhaustedError, WorkerFailures)
+from .faults import (DeviceLostError, FaultPlan, InjectedFault,
+                     fault_plan_from_env, is_poisoned, poison,
+                     resolve_faults, unpoison)
 from .ops import (DegreeStats, DyadCensus, GraphOp, TriadicProfile, get_op,
                   list_ops, register_op)
 from .plan import (CensusPlan, GraphMeta, Plan, PlanShapeError,
@@ -59,11 +76,14 @@ from .plan import (CensusPlan, GraphMeta, Plan, PlanShapeError,
                    plan_cache_stats, set_plan_cache_capacity)
 
 __all__ = [
-    "BACKENDS", "CensusConfig", "CensusPlan", "CensusResult", "ChunkTask",
-    "DegreeStats", "DeltaResult", "DyadCensus", "EngineConfig", "Executor",
-    "GraphDelta", "GraphMeta", "GraphOp", "Plan", "PlanShapeError",
-    "SCHEDULES", "TriadicProfile", "affected_dyads", "apply_delta_csr",
-    "clear_plan_cache", "compile", "compile_census", "delta_correction",
-    "get_op", "list_ops", "plan_cache_stats", "register_op",
-    "set_plan_cache_capacity",
+    "BACKENDS", "CensusConfig", "CensusPlan", "CensusResult",
+    "ChunkRetryError", "ChunkTask", "DegreeStats", "DeltaResult",
+    "DeviceLostError", "DyadCensus", "EngineConfig", "Executor",
+    "FaultPlan", "GraphDelta", "GraphMeta", "GraphOp", "InjectedFault",
+    "Plan", "PlanShapeError", "PoolExhaustedError", "SCHEDULES",
+    "TriadicProfile", "WorkerFailures", "affected_dyads",
+    "apply_delta_csr", "clear_plan_cache", "compile", "compile_census",
+    "delta_correction", "fault_plan_from_env", "get_op", "is_poisoned",
+    "list_ops", "plan_cache_stats", "poison", "register_op",
+    "resolve_faults", "set_plan_cache_capacity", "unpoison",
 ]

@@ -712,3 +712,10 @@ def _pallas_bucket_tasks(plan, g: CSRGraph, ks: tuple,
         return tasks
 
     return _memo_tasks(plan, g, ("pallas", ks, chunk), build)
+
+
+#: backend-name → full-pass runner, the single dispatch table
+#: :meth:`repro.engine.plan.Plan._run_raw` (and its degradation ladder)
+#: executes through — a demoted plan re-enters here under its new rung.
+RUNNERS = {"xla": run_xla, "distributed": run_distributed,
+           "pallas": run_pallas}

@@ -19,6 +19,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from .faults import FaultPlan
+
 BACKENDS = ("xla", "pallas", "distributed", "auto")
 SCHEDULES = ("static", "dynamic")
 
@@ -99,6 +101,30 @@ class EngineConfig:
             instead.  The default ``0.5`` is the delta pass's break-even
             — it walks the affected set twice, once per graph version.
             ``1.0`` always prefers the delta path.
+        max_attempts: bounded retry budget per chunk dispatch (>= 1).  A
+            failed chunk is re-dispatched — on the static schedule in
+            place, on the dynamic schedule re-queued onto surviving pool
+            devices — up to this many total attempts before the run
+            raises :class:`~repro.engine.executor.ChunkRetryError`.
+            Chunk kernels are functional (a failed attempt never touches
+            the accumulator), so recovered runs are bit-identical to
+            fault-free runs and still cost one device→host sync.
+        backend_fallback: enable the pallas→xla rung of the degradation
+            ladder — a pallas compile or runtime failure demotes the
+            plan to the xla backend (recorded in ``Plan.degradation``)
+            instead of failing the run.  ``False`` re-raises.
+        schedule_fallback: enable the dynamic→static rung — a dynamic
+            schedule whose device pool is exhausted (every device lost
+            or quarantined) re-runs the task list in-order on a single
+            device instead of failing the run.  ``False`` re-raises
+            :class:`~repro.engine.executor.PoolExhaustedError`.
+        fault_plan: a deterministic
+            :class:`~repro.engine.faults.FaultPlan` injected into this
+            plan's dispatch paths (``None`` = inherit the
+            ``REPRO_FAULT_PLAN`` environment plan if set; an explicitly
+            inert ``FaultPlan()`` opts out even under the environment
+            hook).  Part of the cache key — faulty and clean plans never
+            share compiled state.
     """
 
     backend: str = "auto"
@@ -116,6 +142,10 @@ class EngineConfig:
     schedule: str = "static"
     n_executor_devices: Optional[int] = None
     delta_threshold: float = 0.5
+    max_attempts: int = 3
+    backend_fallback: bool = True
+    schedule_fallback: bool = True
+    fault_plan: Optional[FaultPlan] = None
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -165,6 +195,21 @@ class EngineConfig:
                 "recompute — 1.0 always prefers the delta path")
         object.__setattr__(self, "delta_threshold",
                            float(self.delta_threshold))
+        if self.max_attempts < 1:
+            raise ValueError(
+                f"max_attempts must be >= 1 (got {self.max_attempts}); it "
+                "is the total dispatch budget per chunk — 1 disables retry")
+        for flag in ("backend_fallback", "schedule_fallback"):
+            if not isinstance(getattr(self, flag), bool):
+                raise ValueError(
+                    f"{flag} must be a bool (got "
+                    f"{getattr(self, flag)!r}); it toggles one rung of "
+                    "the degradation ladder")
+        if self.fault_plan is not None and not isinstance(self.fault_plan,
+                                                          FaultPlan):
+            raise ValueError(
+                f"fault_plan must be a FaultPlan or None, got "
+                f"{type(self.fault_plan).__name__}")
 
     @property
     def acc_jnp_dtype(self):

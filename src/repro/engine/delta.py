@@ -46,6 +46,7 @@ from ..core import balance
 from ..core.delta import GraphDelta, affected_dyads, apply_delta_csr
 from ..core.graph import CSRGraph
 from .executor import _ACC_SHIFT, ChunkTask, _acc_fetch
+from .faults import InjectedFault, resolve_faults
 
 __all__ = ["DeltaResult", "delta_correction"]
 
@@ -298,6 +299,21 @@ def run_delta(plan, g: CSRGraph, delta: GraphDelta,
     ``delta_runs`` / ``delta_fulls`` counters."""
     g_new = apply_delta_csr(g, delta)
     plan._check(g_new)
+    fplan = resolve_faults(plan.config.fault_plan)
+    if fplan is not None:
+        # injected mid-mutate failure: the new graph exists but no counts
+        # have been committed — stateful callers (the serve layer's
+        # subscribed sessions) must roll back to their pre-mutation
+        # (graph, raw) snapshot.  Keyed on a monotone per-plan attempt
+        # counter (NOT the completed-run counters, which a failed attempt
+        # never advances), so which application fails is deterministic
+        # and a retry of a failed ordinal proceeds.
+        ordinal = plan.stats.get("delta_attempts", 0)
+        plan.stats["delta_attempts"] = ordinal + 1
+        if fplan.mutate_fails(ordinal):
+            raise InjectedFault(
+                f"injected mid-mutate failure (delta application "
+                f"#{ordinal})")
     if delta.is_empty:
         # nothing can change: zero-cost, no device work, no sync.  (The
         # raw bins are still required — an empty delta is not a run.)

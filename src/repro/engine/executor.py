@@ -32,6 +32,27 @@ bit-identical to the static path for any task-to-device assignment) and
 ONE device→host transfer (:func:`_acc_fetch`) completes the run
 regardless of pool size.
 
+**Fault tolerance** (hours-long runs on a pool must survive a failed
+kernel launch or a lost device): every chunk dispatch has a bounded
+retry budget (``EngineConfig.max_attempts``).  Chunk kernels are
+functional — a failed attempt never touches the accumulator — so a
+retried chunk folds exactly once and recovered runs stay bit-identical
+to fault-free runs, still in one device→host sync.  On the dynamic
+schedule a failed task is **re-queued onto surviving devices**; a device
+that raises :class:`~repro.engine.faults.DeviceLostError` (or fails
+:data:`Executor.QUARANTINE_AFTER` dispatches) is **quarantined** out of
+the pool for the rest of the run — its already-folded accumulator stays
+valid (only successful folds touched it) and merges normally.  A pool
+with every device gone raises :class:`PoolExhaustedError`, which
+:meth:`Executor.run` converts into the degradation ladder's
+dynamic→static rung (``EngineConfig.schedule_fallback``): the full task
+list re-runs in-order on the primary device with device-loss injection
+suppressed (fresh-device semantics).  All recovery actions land in
+``stats["faults"]`` counters and a bounded ``stats["fault_events"]``
+trace — deterministic under a seeded
+:class:`~repro.engine.faults.FaultPlan`, which is also how every one of
+these paths is exercised in CI (see :mod:`repro.engine.faults`).
+
 Exercise the pool on CPU CI with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 """
@@ -45,12 +66,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .faults import DeviceLostError, InjectedFault, resolve_faults
+
 # the device accumulator is an int32 (hi, lo) pair: count = hi * 2**30 + lo
 # with 0 <= lo < 2**30 — exact for totals up to 2**61 without enabling x64.
 # Per-fold deltas must stay below 2**30, which holds whenever
 # batch * n < 2**30 (the same order of invariant the int32 scan partials
 # already required; GraphOp kernels promise the same bound).
 _ACC_SHIFT = 30
+
+#: cap on the per-plan fault-event trace (it is a diagnostic, not a log).
+_MAX_EVENTS = 512
 
 
 def _acc_update(hi, lo, delta):
@@ -89,6 +115,49 @@ def _throttle(window: collections.deque, ref, depth: int) -> None:
         window.popleft().block_until_ready()
 
 
+class WorkerFailures(RuntimeError):
+    """Aggregate of *secondary* concurrent worker failures, attached as
+    the ``__cause__`` of the primary raised error so a multi-device
+    failure is fully diagnosable from one traceback (the pre-fix
+    executor raised ``errors[0]`` and silently dropped the rest).  The
+    individual exceptions are in ``.errors``."""
+
+    def __init__(self, errors):
+        self.errors = list(errors)
+        super().__init__(
+            f"{len(self.errors)} additional concurrent worker failure(s): "
+            + "; ".join(repr(e) for e in self.errors))
+
+
+class ChunkRetryError(RuntimeError):
+    """A chunk kept failing after its full ``max_attempts`` dispatch
+    budget (possibly across several pool devices).  The last underlying
+    failure is the ``__cause__``; every attempt's exception is in
+    ``.attempts``."""
+
+    def __init__(self, message, attempts=()):
+        self.attempts = list(attempts)
+        super().__init__(message)
+
+
+class PoolExhaustedError(RuntimeError):
+    """Every device in a dynamic-schedule pool was lost or quarantined
+    while tasks remained queued.  With
+    ``EngineConfig.schedule_fallback=True`` (the default) the executor
+    converts this into the ladder's static single-device re-run instead
+    of surfacing it."""
+
+
+def _raise_worker_errors(errors):
+    """Raise the primary worker error with any concurrent secondaries
+    attached via ``__cause__`` (:class:`WorkerFailures`) — nothing is
+    silently dropped."""
+    primary, rest = errors[0], errors[1:]
+    if rest:
+        raise primary from WorkerFailures(rest)
+    raise primary
+
+
 class ChunkTask(NamedTuple):
     """One schedulable span of the dyad stream: dyads ``[start, end)``,
     its cost-model-predicted work (drives the executor's balance stats),
@@ -107,10 +176,12 @@ class Executor:
 
     Built by :class:`repro.engine.plan.Plan` from its
     :class:`~repro.engine.EngineConfig` (``schedule``,
-    ``n_executor_devices``); the distributed backend pins the pool to a
-    single slot because its mesh already owns every device (shard_map is
-    the parallelism there — the executor contributes only the chunk
-    loop).  See the module docstring for the scheduling policies.
+    ``n_executor_devices``, ``max_attempts``, ``schedule_fallback``,
+    ``fault_plan``); the distributed backend pins the pool to a single
+    slot because its mesh already owns every device (shard_map is the
+    parallelism there — the executor contributes only the chunk loop).
+    See the module docstring for the scheduling and fault-recovery
+    policies.
 
     :meth:`run` drives ``step(ctx, hi, lo, task) -> (hi, lo)`` over the
     task list, where ``ctx = place(device)`` is the backend's
@@ -121,14 +192,25 @@ class Executor:
     occupancy signal :meth:`repro.serve.CensusService.stats` aggregates.
     """
 
-    def __init__(self, config, stats: dict, *, n_devices: int = 1):
+    #: generic (non-device-loss) dispatch failures on one device before
+    #: it is quarantined — provided at least one other device survives.
+    QUARANTINE_AFTER = 2
+
+    def __init__(self, config, stats: dict, *, n_devices: int = 1,
+                 backend: str = "xla"):
         self.schedule = config.schedule
         self.depth = max(1, config.pipeline_depth)
+        self.max_attempts = max(1, config.max_attempts)
+        self.schedule_fallback = config.schedule_fallback
+        self.backend = backend
+        self.faults = resolve_faults(config.fault_plan)
         n = max(1, min(n_devices, len(jax.devices())))
         # a 1-slot pool keeps default placement (device=None): no
         # device_put, no behavior change vs the pre-executor engine.
         self.devices = list(jax.devices()[:n]) if n > 1 else [None]
         self.stats = stats
+        self._flock = threading.Lock()
+        self._suppress_device_loss = False
 
     @property
     def n_devices(self) -> int:
@@ -139,64 +221,221 @@ class Executor:
         dc = self.stats.setdefault("device_chunks", {})
         dc[dev_index] = dc.get(dev_index, 0) + count
 
+    # -- fault bookkeeping (thread-safe; counters + bounded trace) -----------
+
+    def _fault_stats(self) -> dict:
+        return self.stats.setdefault(
+            "faults", dict(chunk_failures=0, retries=0, device_losses=0,
+                           quarantines=0, backend_fallbacks=0,
+                           schedule_fallbacks=0))
+
+    def _note(self, *event, **counters) -> None:
+        """Record fault counters and one trace event under the lock."""
+        with self._flock:
+            fs = self._fault_stats()
+            for k, v in counters.items():
+                fs[k] = fs.get(k, 0) + v
+            if event:
+                trace = self.stats.setdefault("fault_events", [])
+                if len(trace) < _MAX_EVENTS:
+                    trace.append(event)
+
+    # -- fault-aware single dispatch -----------------------------------------
+
+    def _dispatch(self, ctx, hi, lo, task, step, dev_index, ordinal, attempt):
+        """One dispatch attempt of ``task`` on pool device ``dev_index``,
+        with injection checks from the resolved fault plan (skipped
+        entirely — zero overhead — when no plan is active)."""
+        f = self.faults
+        if f is not None:
+            if (not self._suppress_device_loss
+                    and f.device_lost(dev_index, ordinal)):
+                self._note("device_loss", dev_index, device_losses=1)
+                raise DeviceLostError(
+                    f"injected loss of pool device {dev_index} at dispatch "
+                    f"ordinal {ordinal}")
+            if f.runtime_fails(self.backend):
+                self._note("runtime_failure", self.backend, task.start,
+                           chunk_failures=1)
+                raise InjectedFault(
+                    f"injected {self.backend} runtime failure for chunk at "
+                    f"dyad {task.start}")
+            if f.chunk_fails(task.start, attempt):
+                self._note("chunk_failure", task.start, attempt,
+                           chunk_failures=1)
+                raise InjectedFault(
+                    f"injected failure for chunk at dyad {task.start} "
+                    f"(attempt {attempt})")
+            f.maybe_delay(task.start)
+        return step(ctx, hi, lo, task)
+
+    def _attempt(self, ctx, hi, lo, task, step, dev_index, ordinal):
+        """Bounded-retry dispatch of one task on one device (the static
+        path's recovery policy).  Chunk kernels are functional, so a
+        failed attempt leaves (hi, lo) untouched and the eventual
+        successful fold is bit-identical to a fault-free run."""
+        failures: list = []
+        for attempt in range(1, self.max_attempts + 1):
+            try:
+                return self._dispatch(ctx, hi, lo, task, step, dev_index,
+                                      ordinal, attempt)
+            except Exception as e:  # noqa: BLE001 — KeyboardInterrupt etc.
+                # (BaseException) must still abort the run immediately.
+                failures.append(e)
+                if isinstance(e, DeviceLostError):
+                    break  # the device is gone; retrying in place is futile
+                if attempt < self.max_attempts:
+                    self._note("retry", task.start, attempt, retries=1)
+        err = ChunkRetryError(
+            f"chunk [{task.start}, {task.end}) failed after "
+            f"{len(failures)} attempt(s) on device {dev_index}",
+            attempts=failures)
+        raise err from failures[-1]
+
     def run(self, tasks, *, place, step, init):
         """Execute every task; returns the merged (hi, lo) accumulator.
 
         ``init`` is the run's starting accumulator (it already carries
         the per-run ``once`` contribution) on default placement; the
-        result is safe to pass to :func:`_acc_fetch`.
+        result is safe to pass to :func:`_acc_fetch`.  Recovers from
+        per-chunk failures (bounded retry / re-queue), quarantines
+        failing pool devices, and — when the pool is exhausted under
+        ``schedule_fallback=True`` — re-runs the whole task list on the
+        ladder's static single-device rung.
         """
         tasks = list(tasks)
         if len(self.devices) == 1:
-            return self._run_inorder(tasks, place, step, init)
-        return self._run_workqueue(tasks, place, step, init)
+            try:
+                return self._run_inorder(tasks, place, step, init)
+            except ChunkRetryError as e:
+                # a 1-wide dynamic pool whose only device died is an
+                # exhausted pool: same ladder rung as the N-wide case.
+                if (self.schedule == "dynamic" and self.schedule_fallback
+                        and isinstance(e.__cause__, DeviceLostError)):
+                    return self._run_fallback(tasks, place, step, init)
+                raise
+        try:
+            return self._run_workqueue(tasks, place, step, init)
+        except PoolExhaustedError:
+            if not self.schedule_fallback:
+                raise
+            return self._run_fallback(tasks, place, step, init)
 
-    # -- static: the pre-executor single-device loop, verbatim ---------------
+    def _run_fallback(self, tasks, place, step, init):
+        """The dynamic→static degradation rung: re-run the full task
+        list in-order on the primary device, with device-loss injection
+        suppressed (the rung models re-attaching a fresh device).  The
+        accumulator restarts from ``init`` — partial dynamic progress is
+        discarded, keeping the result bit-identical to a clean run."""
+        self._note("schedule_fallback", "dynamic->static",
+                   schedule_fallbacks=1)
+        self._suppress_device_loss = True
+        try:
+            return self._run_inorder(tasks, place, step, init)
+        finally:
+            self._suppress_device_loss = False
+
+    # -- static: the pre-executor single-device loop + bounded retry ---------
 
     def _run_inorder(self, tasks, place, step, init):
         ctx = place(self.devices[0])
         hi, lo = init
         window: collections.deque = collections.deque()
-        for t in tasks:
-            hi, lo = step(ctx, hi, lo, t)
+        for ordinal, t in enumerate(tasks):
+            hi, lo = self._attempt(ctx, hi, lo, t, step, 0, ordinal)
+            # chunk + occupancy counters move together so the
+            # sum(device_chunks) == chunks invariant holds even if a
+            # later task exhausts its retries mid-run.
             self.stats["chunks"] += 1
+            self._bump(0, 1)
             _throttle(window, hi, self.depth)
-        self._bump(0, len(tasks))
         return hi, lo
 
     # -- dynamic: worker thread per device, shared task queue ----------------
 
     def _run_workqueue(self, tasks, place, step, init):
-        queue: collections.deque = collections.deque(tasks)
+        # queue entries are (task, attempt): a failed task re-queues with
+        # attempt + 1 and any surviving worker may pick it up; a task
+        # dropped by a *lost* device re-queues at the same attempt (the
+        # device was at fault, not the chunk).
+        queue: collections.deque = collections.deque((t, 1) for t in tasks)
         qlock = threading.Lock()
         accs: list = [None] * len(self.devices)
         counts = [0] * len(self.devices)
-        errors: list = []
+        fatal: list = []
+        alive = set(range(len(self.devices)))
+        failures = [0] * len(self.devices)
+
+        def quarantine(i: int, reason: str) -> None:
+            # callers hold qlock
+            alive.discard(i)
+            self._note("quarantine", i, reason, quarantines=1)
+            if not alive and queue and not fatal:
+                fatal.append(PoolExhaustedError(
+                    f"all {len(self.devices)} pool devices lost or "
+                    f"quarantined with {len(queue)} task(s) remaining"))
+
+        def on_failure(i: int, t, attempt: int, e: Exception) -> None:
+            # callers hold qlock
+            if isinstance(e, DeviceLostError):
+                queue.append((t, attempt))  # chunk not at fault
+                quarantine(i, "device_loss")
+                return
+            failures[i] += 1
+            if attempt >= self.max_attempts:
+                err = ChunkRetryError(
+                    f"chunk [{t.start}, {t.end}) failed after {attempt} "
+                    f"attempt(s) across the device pool")
+                err.__cause__ = e
+                fatal.append(err)
+                return
+            self._note("retry", t.start, attempt, retries=1)
+            queue.append((t, attempt + 1))
+            if failures[i] >= self.QUARANTINE_AFTER and len(alive) > 1:
+                quarantine(i, "repeated_failures")
 
         def worker(i: int, dev) -> None:
             # XLA execution releases the GIL, so worker threads overlap
             # on distinct devices; jit compiles this device's replica on
             # its first task and caches it for the rest of the run.
+            acc = None
             try:
-                ctx = place(dev)
-                acc = jax.device_put((jnp.zeros_like(init[0]),
-                                      jnp.zeros_like(init[1])), dev)
+                try:
+                    ctx = place(dev)
+                    acc = jax.device_put((jnp.zeros_like(init[0]),
+                                          jnp.zeros_like(init[1])), dev)
+                except Exception:  # a device whose context cannot even be
+                    # placed is dead on arrival: quarantine, don't abort.
+                    with qlock:
+                        quarantine(i, "placement_failure")
+                    return
                 window: collections.deque = collections.deque()
+                ordinal = 0
                 while True:
                     with qlock:
-                        if not queue or errors:
+                        if not queue or fatal or i not in alive:
                             break
-                        t = queue.popleft()
-                    hi, lo = step(ctx, *acc, t)
+                        t, attempt = queue.popleft()
+                    try:
+                        hi, lo = self._dispatch(ctx, *acc, t, step, i,
+                                                ordinal, attempt)
+                    except Exception as e:
+                        ordinal += 1
+                        with qlock:
+                            on_failure(i, t, attempt, e)
+                        continue
+                    ordinal += 1
                     acc = (hi, lo)
                     counts[i] += 1
                     _throttle(window, hi, self.depth)
-                accs[i] = acc
             except BaseException as e:  # noqa: BLE001 — ANY escape must
                 # surface in the caller's thread: a silently dead worker
                 # would otherwise drop every chunk it had folded and the
                 # merged run would under-count with no error raised.
-                errors.append(e)
+                with qlock:
+                    fatal.append(e)
+            finally:
+                accs[i] = acc
 
         threads = [threading.Thread(target=worker, args=(i, d), daemon=True)
                    for i, d in enumerate(self.devices)]
@@ -204,14 +443,22 @@ class Executor:
             t.start()
         for t in threads:
             t.join()
-        if errors:
-            raise errors[0]
+        if fatal:
+            # PoolExhaustedError outranks secondary errors: run() turns it
+            # into the static-fallback rung, which re-runs everything.
+            pool_dead = [e for e in fatal
+                         if isinstance(e, PoolExhaustedError)]
+            if pool_dead:
+                raise pool_dead[0]
+            _raise_worker_errors(fatal)
         self.stats["chunks"] += len(tasks)
         for i, c in enumerate(counts):
             if c:
                 self._bump(i, c)
         # merge worker accumulators on the primary device: exact integer
-        # folds, so the result is independent of the task assignment.
+        # folds, so the result is independent of the task assignment.  A
+        # quarantined worker's accumulator is still valid — only its
+        # *successful* folds touched it — and merges like any other.
         hi, lo = init
         primary = self.devices[0]
         for acc in accs:

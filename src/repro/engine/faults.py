@@ -1,0 +1,285 @@
+"""Deterministic fault injection for the execution and serving layers.
+
+The paper's workload is hours-long memory-bound traversals over an
+accelerator pool — the regime where a failed kernel launch, a lost
+device, or one poison graph in a batch is a matter of *when*, not *if*.
+This module makes every such failure **reproducibly testable in CI**: a
+:class:`FaultPlan` is a frozen, hashable description of which faults
+fire where, and every decision is a pure function of the plan's seed and
+the dispatch coordinates (chunk start offset, attempt number, pool
+device index, dispatch ordinal).  No wall clocks, no runtime RNG state —
+replaying a run under the same plan injects exactly the same faults, so
+the executor's retry / quarantine / fallback machinery (see
+:mod:`repro.engine.executor` and the degradation ladder in
+:mod:`repro.engine.plan`) can be asserted against, not just hoped for.
+
+Faults are threaded through two hooks:
+
+  * ``EngineConfig(fault_plan=FaultPlan(...))`` — per-plan injection
+    (the fault plan is part of the plan-cache key, so faulty and clean
+    plans never share compiled state);
+  * the ``REPRO_FAULT_PLAN`` environment variable — a JSON object of
+    :class:`FaultPlan` fields applied to every config whose own
+    ``fault_plan`` is ``None``.  This is the chaos-CI hook: the whole
+    tier-1 suite runs under a standing plan of recoverable faults and
+    must stay green (``.github/workflows/ci.yml`` job ``test-chaos``).
+    A config that must stay fault-free under chaos CI passes an inert
+    ``FaultPlan()`` explicitly, which overrides the environment.
+
+Poison graphs are the one injection not keyed by coordinates:
+:func:`poison` marks a live :class:`~repro.core.graph.CSRGraph` object
+so any run (or vmapped batch) containing it raises — the tool for
+testing the service's member-wise batch isolation.  The registry holds
+weak references, so a poisoned graph un-poisons itself when collected.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+import weakref
+from typing import Optional, Tuple
+
+__all__ = ["DeviceLostError", "FaultPlan", "InjectedFault",
+           "fault_plan_from_env", "is_poisoned", "poison", "resolve_faults",
+           "unpoison"]
+
+_BACKENDS = ("xla", "pallas", "distributed")
+ENV_VAR = "REPRO_FAULT_PLAN"
+
+
+class InjectedFault(RuntimeError):
+    """A failure raised by the fault-injection harness (never by real
+    hardware): an injected chunk/kernel failure, compile failure,
+    mid-mutate failure, or poison-graph rejection.  Deliberately a plain
+    ``RuntimeError`` subclass so recovery code paths cannot special-case
+    injected faults away from real ones."""
+
+
+class DeviceLostError(InjectedFault):
+    """An injected *permanent* device loss: every dispatch on the lost
+    pool device raises this, modeling a device that fell off the bus.
+    The executor reacts by quarantining the device (its queued work is
+    re-dispatched to survivors) rather than retrying in place."""
+
+
+def _hash01(seed: int, *coords) -> float:
+    """Deterministic uniform [0, 1) from (seed, coordinates) — a pure
+    counter-based hash, so fault decisions never consume RNG state."""
+    payload = repr((int(seed),) + coords).encode()
+    digest = hashlib.blake2b(payload, digest_size=8).digest()
+    return int.from_bytes(digest, "big") / 2.0 ** 64
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seeded, deterministic schedule of injected faults.
+
+    Frozen and hashable — it rides inside
+    :class:`~repro.engine.EngineConfig` (and therefore the plan-cache
+    key).  All-default construction is **inert**: no fault ever fires,
+    and an inert plan explicitly passed to a config suppresses the
+    ``REPRO_FAULT_PLAN`` environment plan (see :func:`resolve_faults`).
+
+    Attributes:
+        seed: hash seed — same seed, same coordinates, same faults.
+        chunk_failure_rate: probability (per chunk, decided by
+            ``hash(seed, chunk start)``) that a chunk's kernel dispatch
+            raises :class:`InjectedFault`.  A selected chunk fails its
+            first ``fail_attempts`` attempts and then succeeds, so with
+            ``fail_attempts < EngineConfig.max_attempts`` every injected
+            chunk failure is deterministically recoverable.
+        fail_attempts: how many consecutive attempts of a selected chunk
+            fail.  Set it at or above ``max_attempts`` to force retry
+            exhaustion (and the degradation ladder) deterministically.
+        device_loss: executor pool device indices that die
+            (:class:`DeviceLostError` on every dispatch at or past
+            ``device_loss_after``).  The static schedule's 1-slot pool is
+            index 0; the ladder's static fallback rung runs with device
+            loss suppressed — it models reconnecting on a fresh device.
+        device_loss_after: per-device dispatch ordinal after which a
+            ``device_loss`` device dies (0 = dead on arrival).
+        compile_failure: backend names whose compiled-unit construction
+            raises at plan-build time — the hook for testing the
+            pallas→xla compile-fallback rung.
+        runtime_failure: backend names where **every** chunk dispatch
+            raises, exhausting retries — the hook for testing the
+            pallas→xla runtime-fallback rung.
+        mutate_failure_calls: 0-based ordinals of a plan's
+            ``apply_delta`` applications that raise mid-mutate — the
+            hook for testing session raw-bin restoration in the serve
+            layer.
+        slow_chunk_rate: probability (per chunk, same keying as
+            ``chunk_failure_rate``) that a dispatch sleeps ``slow_s``
+            seconds first — jitters worker interleavings without
+            changing any result.
+        slow_s: the injected slow-chunk delay in seconds.
+    """
+
+    seed: int = 0
+    chunk_failure_rate: float = 0.0
+    fail_attempts: int = 1
+    device_loss: Tuple[int, ...] = ()
+    device_loss_after: int = 0
+    compile_failure: Tuple[str, ...] = ()
+    runtime_failure: Tuple[str, ...] = ()
+    mutate_failure_calls: Tuple[int, ...] = ()
+    slow_chunk_rate: float = 0.0
+    slow_s: float = 0.001
+
+    def __post_init__(self):
+        # normalize list-valued fields so the plan stays hashable (it is
+        # part of the plan-cache key via EngineConfig.fault_plan)
+        object.__setattr__(self, "device_loss",
+                           tuple(int(d) for d in self.device_loss))
+        object.__setattr__(self, "compile_failure",
+                           tuple(str(b) for b in self.compile_failure))
+        object.__setattr__(self, "runtime_failure",
+                           tuple(str(b) for b in self.runtime_failure))
+        object.__setattr__(self, "mutate_failure_calls",
+                           tuple(int(c) for c in self.mutate_failure_calls))
+        for name in ("chunk_failure_rate", "slow_chunk_rate"):
+            r = float(getattr(self, name))
+            if not 0.0 <= r <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {r}")
+            object.__setattr__(self, name, r)
+        if self.fail_attempts < 1:
+            raise ValueError(
+                f"fail_attempts must be >= 1 (got {self.fail_attempts}); a "
+                "selected chunk fails that many consecutive attempts")
+        if any(d < 0 for d in self.device_loss):
+            raise ValueError(f"device_loss indices must be >= 0, got "
+                             f"{self.device_loss}")
+        if self.device_loss_after < 0:
+            raise ValueError("device_loss_after must be >= 0")
+        for field in ("compile_failure", "runtime_failure"):
+            bad = [b for b in getattr(self, field) if b not in _BACKENDS]
+            if bad:
+                raise ValueError(f"{field} names unknown backends {bad}; "
+                                 f"choose from {_BACKENDS}")
+        if any(c < 0 for c in self.mutate_failure_calls):
+            raise ValueError("mutate_failure_calls ordinals must be >= 0")
+        if float(self.slow_s) < 0:
+            raise ValueError("slow_s must be >= 0")
+        object.__setattr__(self, "slow_s", float(self.slow_s))
+
+    @property
+    def is_inert(self) -> bool:
+        """True when no fault can ever fire — the executor then skips
+        injection checks entirely, keeping the fault-free warm path at
+        its original cost."""
+        return (self.chunk_failure_rate == 0.0 and not self.device_loss
+                and not self.compile_failure and not self.runtime_failure
+                and not self.mutate_failure_calls
+                and self.slow_chunk_rate == 0.0)
+
+    # -- decision points (all pure functions of seed + coordinates) ----------
+
+    def chunk_fails(self, start: int, attempt: int) -> bool:
+        """Does the chunk at dyad offset ``start`` fail this attempt?"""
+        return (attempt <= self.fail_attempts
+                and _hash01(self.seed, "chunk", int(start))
+                < self.chunk_failure_rate)
+
+    def device_lost(self, dev_index: int, ordinal: int) -> bool:
+        """Is pool device ``dev_index`` dead at its ``ordinal``-th
+        dispatch?"""
+        return (dev_index in self.device_loss
+                and ordinal >= self.device_loss_after)
+
+    def compile_fails(self, backend: str) -> bool:
+        """Does building ``backend``'s compiled unit fail?"""
+        return backend in self.compile_failure
+
+    def runtime_fails(self, backend: str) -> bool:
+        """Does every chunk dispatch on ``backend`` fail?"""
+        return backend in self.runtime_failure
+
+    def mutate_fails(self, ordinal: int) -> bool:
+        """Does the ``ordinal``-th (0-based) ``apply_delta`` application
+        on a plan fail mid-mutate?"""
+        return ordinal in self.mutate_failure_calls
+
+    def maybe_delay(self, start: int) -> None:
+        """Sleep ``slow_s`` if the chunk at ``start`` is a selected slow
+        chunk.  Which chunks are slow is deterministic; the sleep only
+        perturbs worker interleavings, never results."""
+        if (self.slow_chunk_rate
+                and _hash01(self.seed, "slow", int(start))
+                < self.slow_chunk_rate):
+            time.sleep(self.slow_s)
+
+
+_ENV_SENTINEL = object()
+_env_plan = _ENV_SENTINEL
+
+
+def fault_plan_from_env() -> Optional[FaultPlan]:
+    """The standing :class:`FaultPlan` from the ``REPRO_FAULT_PLAN``
+    environment variable (a JSON object of FaultPlan fields), or ``None``
+    when unset.  Parsed once per process — the chaos-CI hook must not pay
+    JSON parsing per dispatch."""
+    global _env_plan
+    if _env_plan is _ENV_SENTINEL:
+        raw = os.environ.get(ENV_VAR)
+        if not raw:
+            _env_plan = None
+        else:
+            try:
+                _env_plan = FaultPlan(**json.loads(raw))
+            except (TypeError, ValueError) as e:
+                raise ValueError(
+                    f"invalid {ENV_VAR} value {raw!r}: {e}") from e
+    return _env_plan
+
+
+def resolve_faults(fault_plan: Optional[FaultPlan]) -> Optional[FaultPlan]:
+    """The active fault plan for a config: the config's own plan when
+    set (``None`` if it is inert — an explicit inert plan is the opt-out
+    under chaos CI), else the ``REPRO_FAULT_PLAN`` environment plan.
+    Returns ``None`` when no fault can fire, which is the executor's
+    signal to skip injection checks entirely."""
+    plan = fault_plan if fault_plan is not None else fault_plan_from_env()
+    return None if (plan is None or plan.is_inert) else plan
+
+
+# -- poison graphs (the batch-isolation injection) ---------------------------
+
+# id -> weakref: graphs hold jax arrays so they are weak-referenceable
+# but NOT hashable, ruling out a WeakSet.  The id key is guarded by an
+# identity check on lookup and a collection callback on the ref, so a
+# recycled id can never mark an unrelated object poisoned.
+_POISONED: dict = {}
+
+
+def poison(graph) -> None:
+    """Mark a live graph object as poisoned: any plan run (or vmapped
+    batch) containing it raises :class:`InjectedFault`.  The serve layer
+    must isolate the failure member-wise — peers in the same batch still
+    complete.  Weakly referenced: collection un-poisons automatically."""
+    key = id(graph)
+    _POISONED[key] = weakref.ref(graph, lambda _r, _k=key: _POISONED.pop(_k, None))
+
+
+def unpoison(graph) -> None:
+    """Remove a graph from the poison registry (no-op if absent)."""
+    _POISONED.pop(id(graph), None)
+
+
+def is_poisoned(graph) -> bool:
+    """Is this graph object currently poisoned?  Identity-based — a
+    structurally equal copy is not poisoned."""
+    ref = _POISONED.get(id(graph))
+    return ref is not None and ref() is graph
+
+
+def check_poisoned(graph) -> None:
+    """Raise :class:`InjectedFault` if ``graph`` is poisoned (the hook
+    the plan's run paths call on every admitted graph)."""
+    if _POISONED and is_poisoned(graph):
+        raise InjectedFault(
+            f"injected poison graph (n={getattr(graph, 'n', '?')}, "
+            f"m={getattr(graph, 'm', '?')}) — this request must fail "
+            "without taking down its batch peers")

@@ -40,6 +40,7 @@ from ..core.graph import next_pow2 as _next_pow2
 from . import backends
 from .config import EngineConfig
 from .executor import Executor
+from .faults import InjectedFault, check_poisoned, resolve_faults
 from .ops import OpLayout, resolve_ops
 
 __all__ = ["CensusPlan", "GraphMeta", "Plan", "PlanShapeError", "compile",
@@ -129,14 +130,26 @@ class Plan:
         self.device_path = config.resolve_device_accum()
         self.stats = {"traces": 0, "runs": 0, "chunks": 0, "host_syncs": 0,
                       "batch_runs": 0, "batch_graphs": 0, "device_chunks": {},
-                      "delta_runs": 0, "delta_fulls": 0}
+                      "delta_runs": 0, "delta_fulls": 0,
+                      "faults": dict(chunk_failures=0, retries=0,
+                                     device_losses=0, quarantines=0,
+                                     backend_fallbacks=0,
+                                     schedule_fallbacks=0),
+                      "fault_events": []}
+        # the degradation ladder: `backend` is the rung currently
+        # executing, `requested_backend` the compile-time ask, and
+        # `degradation` the (usually empty) record of every demotion —
+        # surfaced per cache entry by plan_cache_stats().
+        self.requested_backend = backend
+        self.degradation: list = []
         # chunk dispatch policy + device pool (static 1-slot by default;
         # the distributed backend's mesh already owns every device, so its
         # pool is always pinned to one slot).
         self.executor = Executor(
             config, self.stats,
             n_devices=(1 if backend == "distributed"
-                       else config.resolve_executor_devices()))
+                       else config.resolve_executor_devices()),
+            backend=backend)
         self._batch_fn = None  # lazily-built vmapped unit (xla device path)
         self._census_view = None  # memoized CensusPlan compat wrapper
         # bounded per-graph memo of host-derived chunk schedules
@@ -146,24 +159,59 @@ class Plan:
         # (a backends.TaskStats — plans are cached with a bounded LRU, so
         # only the (n_shards,) weights are retained, never the task arrays).
         self.last_task_stats = None
+        fplan = resolve_faults(config.fault_plan)
+        try:
+            if fplan is not None and fplan.compile_fails(backend):
+                raise InjectedFault(f"injected {backend} compile failure")
+            self._fn = self._build_fn(backend)
+        except Exception as e:
+            # pallas→xla is the only compile-fallback rung: the xla unit
+            # runs the same fused layout anywhere, while a distributed
+            # mesh failure or an unknown backend has no safe substitute.
+            if backend != "pallas" or not config.backend_fallback:
+                raise
+            self._demote("xla", stage="compile", reason=repr(e))
+
+    def _build_fn(self, backend: str):
+        """Build ``backend``'s compiled chunk/stream unit (the ladder
+        re-enters this when demoting pallas→xla)."""
+        config = self.config
         if backend == "xla":
-            self._fn = (
+            return (
                 backends.make_xla_stream_fn(self.layout, config, self.stats,
                                             self.chunk)
                 if self.device_path
                 else backends.make_xla_chunk_fn(self.layout, config,
                                                 self.stats))
-        elif backend == "distributed":
-            if mesh is None:
+        if backend == "distributed":
+            if self.mesh is None:
                 raise ValueError("distributed backend needs a mesh")
             make = (backends.make_distributed_stream_fn if self.device_path
                     else backends.make_distributed_chunk_fn)
-            self._fn = make(self.layout, config, mesh, self.stats)
-        elif backend == "pallas":
+            return make(self.layout, config, self.mesh, self.stats)
+        if backend == "pallas":
             # fused chunk unit; pallas_call manages its own per-shape cache
-            self._fn = backends.make_pallas_chunk_fn(self.layout, config)
-        else:
-            raise ValueError(f"unknown backend {backend!r}")
+            return backends.make_pallas_chunk_fn(self.layout, config)
+        raise ValueError(f"unknown backend {backend!r}")
+
+    def _demote(self, to: str, *, stage: str, reason: str) -> None:
+        """One rung of the degradation ladder: permanently re-point this
+        plan at backend ``to`` (rebuilding its compiled unit), record the
+        event in ``degradation`` / ``stats``, and keep serving.  The xla
+        unit computes the same fused integer bins, so demoted results
+        stay bit-identical; chunk-schedule memo entries are keyed by
+        backend kind and cannot leak across the demotion."""
+        frm = self.backend
+        self.backend = to
+        self.executor.backend = to
+        self._fn = self._build_fn(to)
+        self._batch_fn = None
+        self.stats["faults"]["backend_fallbacks"] += 1
+        trace = self.stats["fault_events"]
+        if len(trace) < 512:
+            trace.append(("backend_fallback", frm, to, stage))
+        self.degradation.append(dict(rung=f"{frm}->{to}", stage=stage,
+                                     reason=reason))
 
     # -- graph admission -----------------------------------------------------
 
@@ -248,6 +296,7 @@ class Plan:
         ``layout.finalize(raw, g)`` recovers the per-op results at any
         point.  Counts as one run (same stats/sync accounting as
         :meth:`run`)."""
+        check_poisoned(g)
         self._check(g)
         self.stats["runs"] += 1
         return self._run_raw(g)
@@ -278,11 +327,20 @@ class Plan:
         return run_delta(self, g, delta, raw)
 
     def _run_raw(self, g: CSRGraph) -> np.ndarray:
-        """Backend dispatch: the fused raw int64 bins (no finalize)."""
-        runner = {"xla": backends.run_xla,
-                  "distributed": backends.run_distributed,
-                  "pallas": backends.run_pallas}[self.backend]
-        return runner(self, g)
+        """Backend dispatch: the fused raw int64 bins (no finalize).
+
+        The pallas→xla runtime rung of the degradation ladder lives
+        here: a pallas run that fails (after the executor's own bounded
+        retries) demotes the plan and re-runs on xla — bit-identical
+        bins, one extra counted sync for the failed run only, and every
+        later run executes on the demoted rung directly."""
+        try:
+            return backends.RUNNERS[self.backend](self, g)
+        except Exception as e:
+            if self.backend != "pallas" or not self.config.backend_fallback:
+                raise
+            self._demote("xla", stage="runtime", reason=repr(e))
+            return backends.RUNNERS[self.backend](self, g)
 
     def run_batch(self, graphs) -> "list[dict]":
         """Execute the fused pass on B same-bucket graphs as one batch.
@@ -309,6 +367,9 @@ class Plan:
         if not graphs:
             return []
         for g in graphs:
+            # a poisoned member fails the batch as a unit — the serve
+            # layer's member-wise retry is what isolates it from peers.
+            check_poisoned(g)
             self._check(g)
         self.stats["runs"] += len(graphs)
         self.stats["batch_runs"] += 1
@@ -561,14 +622,19 @@ def plan_cache_stats() -> dict:
 
     Returns ``hits`` / ``misses`` / ``evictions`` / ``size`` /
     ``capacity`` plus ``entries``: one dict per cached plan, in LRU order
-    (oldest first), holding the bucketized ``meta`` fields, ``backend``,
-    ``device_path``, the plan's ``ops`` (op-name tuple), the resolved
+    (oldest first), holding the bucketized ``meta`` fields, ``backend``
+    (the rung currently executing) with ``requested_backend`` and the
+    ``degradation`` event list (the ladder's per-plan record, normally
+    empty), ``device_path``, the plan's ``ops`` (op-name tuple), the resolved
     streaming ``chunk``, the executor policy (``schedule`` and
     ``n_devices`` — the resolved pool width), and the plan's live
     execution counters (``runs``, ``batch_runs``, ``batch_graphs``,
     ``traces``, ``chunks``, ``host_syncs``, ``delta_runs`` /
     ``delta_fulls`` — incremental applications split by path — plus
-    ``device_chunks``: chunks dispatched per executor pool device, and
+    ``faults`` / ``fault_events``: the executor's recovery counters and
+    bounded event trace (retries, quarantines, device losses,
+    fallbacks), ``device_chunks``: chunks dispatched per executor pool
+    device, and
     ``task_memo``: live entries in the plan's bounded per-graph
     chunk-schedule memo, cleared with the cache by
     :func:`clear_plan_cache`).  This is the introspection surface
@@ -576,11 +642,15 @@ def plan_cache_stats() -> dict:
     """
     entries = [
         dict(meta=dataclasses.asdict(p.meta), backend=p.backend,
+             requested_backend=p.requested_backend,
+             degradation=[dict(d) for d in p.degradation],
              device_path=p.device_path, chunk=p.chunk, ops=p.op_names,
              schedule=p.config.schedule, n_devices=p.executor.n_devices,
              task_memo=len(p._task_memo),
              **{**p.stats,
-                "device_chunks": dict(p.stats["device_chunks"])})
+                "device_chunks": dict(p.stats["device_chunks"]),
+                "faults": dict(p.stats["faults"]),
+                "fault_events": list(p.stats["fault_events"])})
         for p in _PLAN_CACHE.values()
     ]
     return {**_CACHE_STATS, "size": len(_PLAN_CACHE),

@@ -4,10 +4,17 @@ service.
 ``CensusService`` (see :mod:`repro.serve.census_service`) is the graph
 fleet front door: requests — each naming the GraphOp analytics it wants —
 are grouped by (plan-cache bucket, ops) and executed as vmapped
-fixed-shape fused batches through ``Plan.run_batch``.
+fixed-shape fused batches through ``Plan.run_batch``.  The service is
+hardened for long-running fleets: ``ServiceConfig(max_pending=...,
+reject_policy=...)`` admission control (typed :class:`AdmissionError`),
+clockless flush-round deadlines (:class:`DeadlineExceeded` completions),
+member-wise isolation of poison graphs inside a batch, and
+``stats()["health"]`` recovery counters.
 """
-from .census_service import CensusCompletion, CensusService, ServiceConfig
+from .census_service import (AdmissionError, CensusCompletion,
+                             CensusService, DeadlineExceeded, ServiceConfig)
 from .decode import make_prefill_step, make_serve_step
 
-__all__ = ["CensusCompletion", "CensusService", "ServiceConfig",
+__all__ = ["AdmissionError", "CensusCompletion", "CensusService",
+           "DeadlineExceeded", "ServiceConfig",
            "make_prefill_step", "make_serve_step"]

@@ -61,9 +61,28 @@ from ..core.graph import CSRGraph
 from ..engine import CensusConfig, GraphMeta, PlanShapeError, compile
 from ..engine.ops import get_op, resolve_ops
 
-__all__ = ["CensusCompletion", "CensusService", "ServiceConfig"]
+__all__ = ["AdmissionError", "CensusCompletion", "CensusService",
+           "DeadlineExceeded", "ServiceConfig"]
 
 _DEFAULT_OPS = ("triad_census",)
+
+REJECT_POLICIES = ("reject", "flush_oldest")
+
+
+class AdmissionError(RuntimeError):
+    """Backpressure signal: the service's pending queue is at
+    ``ServiceConfig.max_pending`` and ``reject_policy="reject"`` refused
+    a new request.  Typed so load-shedding callers can catch admission
+    rejections apart from execution failures; the rejected request was
+    never assigned an id and holds no service state."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """A request's ``deadline_rounds`` budget ran out before its group
+    executed: the request completes with this as its
+    ``CensusCompletion.error`` payload instead of result data.
+    Deadlines are measured in *flush rounds* (group executions), never
+    wall clocks, so expiry is exactly reproducible in tests."""
 
 
 def _normalize_ops(ops) -> Tuple[str, ...]:
@@ -118,12 +137,32 @@ class ServiceConfig:
             plan-cache reference, so the cap bounds the service's
             resident state; ``subscribe`` past it raises until a session
             is :meth:`~CensusService.unsubscribe`\\ d.
+        max_pending: admission-control cap on submitted-but-not-executed
+            requests (``None`` = unbounded, the pre-hardening behavior).
+            A submit that would exceed it triggers ``reject_policy``.
+            Every pending request pins its graph in host memory, so this
+            is the service's backpressure valve.
+        max_attempts: execution attempts per *request* when its batch
+            fails: after a failed ``run_batch`` the group retries
+            member-wise, each member up to ``max_attempts`` times, so
+            one poison graph surfaces as a single failed
+            :class:`CensusCompletion` (with ``error`` payload) instead
+            of taking down its batch peers.  Independent of the
+            engine-level per-chunk ``EngineConfig.max_attempts``.
+        reject_policy: what a full pending queue does to a new submit —
+            ``"reject"`` raises :class:`AdmissionError` (shed load onto
+            the caller), ``"flush_oldest"`` synchronously flushes the
+            group holding the oldest pending request to free capacity,
+            then admits.
     """
 
     max_batch: int = 8
     max_wait_requests: int = 64
     census: CensusConfig = dataclasses.field(default_factory=CensusConfig)
     max_sessions: int = 64
+    max_pending: Optional[int] = None
+    max_attempts: int = 2
+    reject_policy: str = "reject"
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -132,6 +171,18 @@ class ServiceConfig:
             raise ValueError("max_wait_requests must be >= 0")
         if self.max_sessions < 1:
             raise ValueError("max_sessions must be >= 1")
+        if self.max_pending is not None and self.max_pending < 1:
+            raise ValueError(
+                f"max_pending must be >= 1 (got {self.max_pending}); use "
+                "None for an unbounded pending queue")
+        if self.max_attempts < 1:
+            raise ValueError(
+                f"max_attempts must be >= 1 (got {self.max_attempts}); it "
+                "is the per-request execution budget after a batch failure")
+        if self.reject_policy not in REJECT_POLICIES:
+            raise ValueError(
+                f"reject_policy must be one of {REJECT_POLICIES}, got "
+                f"{self.reject_policy!r}")
 
 
 class CensusCompletion(NamedTuple):
@@ -140,12 +191,26 @@ class CensusCompletion(NamedTuple):
     single-op request (the default census-only case) ``result`` is that
     op's bare result object — a ``CensusResult`` for ``triad_census`` —
     and for a multi-op request it is the fused ``{op_name: result}``
-    dict."""
+    dict.  A request that *failed* (poison graph, exhausted retries, a
+    missed deadline, a dead group thread) still completes — with
+    ``result=None`` and the failure as its ``error`` payload — so one
+    bad request never silently drops, and never takes its batch peers'
+    results down with it."""
 
     request_id: int
     result: Any
     meta: GraphMeta
     ops: Tuple[str, ...] = _DEFAULT_OPS
+    error: Optional[BaseException] = None
+
+
+class _Request(NamedTuple):
+    """One pending entry: stable id, the graph, and the flush-round
+    number after which the request expires (None = no deadline)."""
+
+    rid: int
+    graph: CSRGraph
+    expiry: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -160,6 +225,7 @@ class _Session:
     deltas: int = 0      # mutations served by the affected-subset path
     fulls: int = 0       # mutations that fell back to a full recompute
     recompiles: int = 0  # mutations that outgrew the plan's buckets
+    failed: int = 0      # mutations rolled back after a mid-mutate failure
 
 
 class CensusService:
@@ -196,10 +262,36 @@ class CensusService:
         self._device_chunks: Dict[int, int] = {}
         self._sessions: Dict[int, _Session] = {}
         self._session_seq = 0
+        # flush-round clock (one tick per executed/failed group) — the
+        # clockless time base request deadlines are measured against.
+        self._rounds = 0
+        self._health = dict(retries=0, quarantines=0, backend_fallbacks=0,
+                            schedule_fallbacks=0, rejections=0, poisoned=0,
+                            expired=0, batch_failures=0, group_failures=0,
+                            mutate_failures=0)
 
     # -- request path --------------------------------------------------------
 
-    def submit(self, graph: CSRGraph, ops=None) -> int:
+    def _admit(self) -> None:
+        """Admission control: enforce ``max_pending`` per the configured
+        ``reject_policy`` before a new request takes a queue slot."""
+        cap = self.config.max_pending
+        if cap is None:
+            return
+        while self.pending >= cap:
+            if self.config.reject_policy == "reject":
+                self._health["rejections"] += 1
+                raise AdmissionError(
+                    f"pending queue full ({self.pending} >= max_pending="
+                    f"{cap}); flush(), poll later, or configure "
+                    f"reject_policy='flush_oldest'")
+            # flush_oldest: free capacity by executing the group holding
+            # the oldest pending request, then admit.
+            oldest = min(self._first_seq, key=self._first_seq.get)
+            self._flush_group(oldest)
+
+    def submit(self, graph: CSRGraph, ops=None, *,
+               deadline_rounds: Optional[int] = None) -> int:
         """Queue one analytic request; returns its stable request id.
 
         ``ops`` names the :class:`~repro.engine.GraphOp` set to run — a
@@ -208,7 +300,22 @@ class CensusService:
         ``max_batch``, the group executes immediately (synchronously);
         any group gone stale under ``max_wait_requests`` is flushed too.
         Completions are held until :meth:`poll`.
+
+        ``deadline_rounds`` bounds how long the request may sit pending,
+        measured in flush rounds (group executions — the service's
+        clockless time base): a request still pending after that many
+        further rounds completes with a :class:`DeadlineExceeded` error
+        payload instead of executing.  ``None`` = no deadline.  A full
+        pending queue (``max_pending``) applies ``reject_policy`` first —
+        ``"reject"`` raises :class:`AdmissionError` before an id is
+        assigned.
         """
+        if deadline_rounds is not None and deadline_rounds < 0:
+            raise ValueError(
+                f"deadline_rounds must be >= 0 (got {deadline_rounds}); "
+                "use None for no deadline")
+        self._expire_overdue()
+        self._admit()
         rid = self._seq
         self._seq += 1
         ops_t = _normalize_ops(ops)
@@ -217,7 +324,9 @@ class CensusService:
         group = self._pending.setdefault(key, [])
         if not group:
             self._first_seq[key] = rid
-        group.append((rid, graph))
+        expiry = (None if deadline_rounds is None
+                  else self._rounds + deadline_rounds)
+        group.append(_Request(rid, graph, expiry))
         st = self._bucket_stats.setdefault(
             meta, dict(requests=0, batches=0, batched_graphs=0,
                        host_syncs=0, chunks=0, by_ops={}))
@@ -233,6 +342,33 @@ class CensusService:
                           >= self.config.max_wait_requests)]:
             self._flush_group(stale)
         return rid
+
+    def _expire_overdue(self) -> None:
+        """Complete (with :class:`DeadlineExceeded` payloads) every
+        pending request whose flush-round deadline has passed.  Runs at
+        every submit and flush entry, so an expired request is surfaced
+        by the next service interaction — never left pending."""
+        for key in list(self._pending):
+            group = self._pending[key]
+            dead = [r for r in group
+                    if r.expiry is not None and self._rounds > r.expiry]
+            if not dead:
+                continue
+            keep = [r for r in group if r not in dead]
+            meta, ops_t = key
+            self._health["expired"] += len(dead)
+            self._completed.extend(
+                CensusCompletion(r.rid, None, meta, ops_t,
+                                 error=DeadlineExceeded(
+                                     f"request {r.rid} expired after "
+                                     f"deadline round {r.expiry} (now round "
+                                     f"{self._rounds})"))
+                for r in dead)
+            if keep:
+                self._pending[key] = keep
+            else:
+                del self._pending[key]
+                del self._first_seq[key]
 
     def poll(self, session: Optional[int] = None):
         """Without arguments: drain and return completions accumulated
@@ -300,23 +436,43 @@ class CensusService:
         and reseeds with one full pass.  Returns an ack dict: ``mode``
         (``"delta"`` | ``"full"`` | ``"recompile"``),
         ``affected_fraction``, and the new ``n`` / ``m``; read the fresh
-        counts with :meth:`poll`\\ (session)."""
+        counts with :meth:`poll`\\ (session).
+
+        **Failure atomicity**: a mutation that fails mid-way (an
+        injected or real execution failure at any point — delta pass,
+        full recompute, or recompile reseed) re-raises AND rolls the
+        session back to its pre-mutation (graph, raw bins, plan)
+        snapshot, so a subscribed session never serves corrupted counts
+        — :meth:`poll`\\ (session) keeps answering from the last good
+        state.  Rolled-back mutations are counted per session
+        (``failed``) and in ``stats()["health"]["mutate_failures"]``."""
         s = self._session(session)
+        snapshot = (s.graph, s.raw, s.plan)
         try:
-            out = s.plan.apply_delta(s.graph, delta, s.raw)
-            s.graph, s.raw = out.graph, out.raw
-            mode, frac = out.mode, out.affected_fraction
-            if mode == "delta":
-                s.deltas += 1
-            else:
-                s.fulls += 1
-        except PlanShapeError:
-            g_new = apply_delta_csr(s.graph, delta)
-            s.plan = compile(g_new, s.ops, self.config.census,
-                             mesh=self.mesh)
-            s.graph, s.raw = g_new, s.plan.run_raw(g_new)
-            s.recompiles += 1
-            mode, frac = "recompile", 1.0
+            try:
+                out = s.plan.apply_delta(s.graph, delta, s.raw)
+                s.graph, s.raw = out.graph, out.raw
+                mode, frac = out.mode, out.affected_fraction
+                if mode == "delta":
+                    s.deltas += 1
+                else:
+                    s.fulls += 1
+            except PlanShapeError:
+                # compute the whole new state BEFORE committing any of it:
+                # a failure inside the recompile reseed must leave the
+                # session on its old (graph, raw, plan) triple.
+                g_new = apply_delta_csr(s.graph, delta)
+                plan_new = compile(g_new, s.ops, self.config.census,
+                                   mesh=self.mesh)
+                raw_new = plan_new.run_raw(g_new)
+                s.plan, s.graph, s.raw = plan_new, g_new, raw_new
+                s.recompiles += 1
+                mode, frac = "recompile", 1.0
+        except Exception:
+            s.graph, s.raw, s.plan = snapshot
+            s.failed += 1
+            self._health["mutate_failures"] += 1
+            raise
         s.mutations += 1
         return dict(session=session, mode=mode, affected_fraction=frac,
                     n=s.graph.n, m=s.graph.m)
@@ -338,7 +494,17 @@ class CensusService:
         over the shared executor device pool — different buckets land on
         different devices at the same time.  Results and completion
         order are identical to the sequential drain (integer arithmetic;
-        groups are recorded in submission order)."""
+        groups are recorded in submission order).
+
+        **Consistency under failure**: a group whose thread dies
+        mid-flush fails its requests *explicitly* — each surfaces as a
+        :class:`CensusCompletion` with the error payload — and the queue
+        / session tables stay consistent (``pending`` is 0 after any
+        flush; nothing is ever stuck or silently dropped), while peer
+        groups' results are recorded normally.  Per-request failures
+        inside a live group (poison graphs) are isolated member-wise by
+        :meth:`_execute_group` before they can reach here."""
+        self._expire_overdue()
         keys = list(self._pending)
         if len(keys) > 1 and self.config.census.schedule == "dynamic":
             # compile every plan BEFORE popping any group (the plan cache
@@ -362,16 +528,12 @@ class CensusService:
                         for key, group in jobs]
                 outs = [f.result() if not f.exception() else f.exception()
                         for f in futs]
-            # record every group that finished, THEN surface the first
-            # failure — a bad group must not discard its peers' results.
-            error = None
+            # every group is recorded — results for the live ones,
+            # explicit per-request error completions for a dead one — so
+            # a bad group can neither discard its peers' results nor
+            # leave its own requests pending forever.
             for (key, group), out in zip(jobs, outs):
-                if isinstance(out, BaseException):
-                    error = error or out
-                else:
-                    self._record_group(key, group, out)
-            if error is not None:
-                raise error
+                self._record_outcome(key, group, out)
         else:
             for key in keys:
                 self._flush_group(key)
@@ -383,7 +545,10 @@ class CensusService:
 
         Completions belonging to requests submitted *before* this call
         (drained by the flush) are retained for the next :meth:`poll` —
-        never discarded.
+        never discarded.  A fleet member that *failed* (poison graph,
+        exhausted retries) yields ``None`` in its slot — check the
+        completion stream via :meth:`submit` + :meth:`flush` directly
+        when per-request error payloads matter.
         """
         ids = [self.submit(g, ops) for g in graphs]
         mine = set(ids)
@@ -409,31 +574,80 @@ class CensusService:
         group = self._pending.pop(key)
         self._first_seq.pop(key)
         plan = compile(meta, ops_t, self.config.census, mesh=self.mesh)
-        self._record_group(key, group, self._execute_group(plan, group))
+        try:
+            out = self._execute_group(plan, group)
+        except BaseException as e:  # same contract as the dynamic drain:
+            # the group's requests fail explicitly, never silently drop.
+            self._record_outcome(key, group, e)
+            raise
+        self._record_outcome(key, group, out)
 
     def _execute_group(self, plan, group) -> dict:
         """Run one group's batch; returns results + the plan-stat deltas.
 
+        **Member-wise isolation**: if the batch fails as a unit (one
+        poison graph poisons the whole vmapped pass), every member
+        retries individually — up to ``ServiceConfig.max_attempts``
+        each — so healthy peers still produce results and only the bad
+        request carries an error payload.  No exception escapes for
+        per-member failures.
+
         Thread-safe against other groups: distinct (bucket, ops) keys
         map to distinct plans, so concurrent group threads touch
         disjoint plan state (service bookkeeping stays on the caller's
-        thread — see :meth:`_record_group`)."""
+        thread — see :meth:`_record_outcome`)."""
         before = {k: plan.stats[k] for k in ("host_syncs", "chunks")}
         before_dev = dict(plan.stats["device_chunks"])
-        results = plan.run_batch([g for _, g in group])
+        before_faults = dict(plan.stats["faults"])
+        graphs = [r.graph for r in group]
+        errors: list = [None] * len(group)
+        batch_failed = 0
+        try:
+            results = plan.run_batch(graphs)
+        except Exception:
+            # the batch is poisoned as a unit — retry member-wise so one
+            # bad graph costs one failed completion, not the group.
+            batch_failed = 1
+            results = [None] * len(group)
+            for i, g in enumerate(graphs):
+                for _ in range(self.config.max_attempts):
+                    try:
+                        results[i] = plan.run(g)
+                        errors[i] = None
+                        break
+                    except Exception as e:
+                        errors[i] = e
         dev = {d: c - before_dev.get(d, 0)
                for d, c in plan.stats["device_chunks"].items()
                if c - before_dev.get(d, 0)}
-        return dict(results=results,
+        faults = {k: v - before_faults.get(k, 0)
+                  for k, v in plan.stats["faults"].items()}
+        return dict(results=results, errors=errors, batch_failed=batch_failed,
+                    faults=faults,
                     host_syncs=plan.stats["host_syncs"] - before["host_syncs"],
                     chunks=plan.stats["chunks"] - before["chunks"],
                     device_chunks=dev)
 
-    def _record_group(self, key, group, out: dict) -> None:
+    def _record_outcome(self, key, group, out) -> None:
+        """Fold one executed (or dead) group into service state — always
+        on the flush caller's thread, so bucket stats, health counters
+        and the completion list need no locks.  ``out`` is
+        :meth:`_execute_group`'s dict for a live group, or the exception
+        that killed its thread — in which case every request completes
+        explicitly with that error as payload (the queue was already
+        popped; nothing stays pending)."""
         meta, ops_t = key
+        self._rounds += 1
+        if isinstance(out, BaseException):
+            self._health["group_failures"] += 1
+            self._completed.extend(
+                CensusCompletion(r.rid, None, meta, ops_t, error=out)
+                for r in group)
+            return
         results = out["results"]
+        errors = out["errors"]
         if len(ops_t) == 1:  # single-op requests complete with bare results
-            results = [r[ops_t[0]] for r in results]
+            results = [r if r is None else r[ops_t[0]] for r in results]
         st = self._bucket_stats[meta]
         st["batches"] += 1
         st["batched_graphs"] += len(group)
@@ -441,9 +655,14 @@ class CensusService:
         st["chunks"] += out["chunks"]
         for d, c in out["device_chunks"].items():
             self._device_chunks[d] = self._device_chunks.get(d, 0) + c
+        self._health["batch_failures"] += out["batch_failed"]
+        self._health["poisoned"] += sum(1 for e in errors if e is not None)
+        for k in ("retries", "quarantines", "backend_fallbacks",
+                  "schedule_fallbacks"):
+            self._health[k] += out["faults"].get(k, 0)
         self._completed.extend(
-            CensusCompletion(rid, res, meta, ops_t)
-            for (rid, _), res in zip(group, results))
+            CensusCompletion(r.rid, res, meta, ops_t, error=err)
+            for r, res, err in zip(group, results, errors))
 
     # -- introspection -------------------------------------------------------
 
@@ -464,9 +683,21 @@ class CensusService:
         live subscribed-session id to its mutation counters —
         ``mutations`` split into ``deltas`` (affected-subset path),
         ``fulls`` (cost-model fallback) and ``recompiles`` (bucket
-        outgrowth) — plus the session's current graph size and ops; the
-        delta/full split is the incremental engine's hit rate, the number
-        that says whether the mutation stream is actually local.
+        outgrowth), plus ``failed`` (mutations rolled back to the
+        pre-mutation snapshot) — plus the session's current graph size
+        and ops; the delta/full split is the incremental engine's hit
+        rate, the number that says whether the mutation stream is
+        actually local.  ``rounds`` is the flush-round clock deadlines
+        are measured against, and ``health`` aggregates every recovery
+        the service has performed: engine-level ``retries`` /
+        ``quarantines`` / ``backend_fallbacks`` / ``schedule_fallbacks``
+        (summed from the plans' fault counters), plus service-level
+        ``rejections`` (admission control), ``expired`` (missed
+        deadlines), ``batch_failures`` (groups that retried
+        member-wise), ``poisoned`` (requests completing with error
+        payloads), ``group_failures`` (dead flush threads) and
+        ``mutate_failures`` (rolled-back session mutations) — all zeros
+        on a healthy service.
         """
         buckets = {}
         total_batches = total_graphs = 0
@@ -486,8 +717,11 @@ class CensusService:
                         if total_batches else 0.0),
             buckets=buckets,
             devices=dict(self._device_chunks),
+            rounds=self._rounds,
+            health=dict(self._health),
             sessions={sid: dict(mutations=s.mutations, deltas=s.deltas,
                                 fulls=s.fulls, recompiles=s.recompiles,
+                                failed=s.failed,
                                 n=s.graph.n, m=s.graph.m, ops=s.ops)
                       for sid, s in self._sessions.items()},
         )

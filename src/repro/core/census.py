@@ -275,6 +275,14 @@ def host_bucket_schedule(g: CSRGraph, ks: tuple, *,
 
     ``with_needs=False`` skips the O(D log D) sort and returns ``None``
     for ``need_sorted`` — the static schedule only consumes the counts.
+
+    Operates on whatever graph it is handed: under the engine's
+    ``reorder=`` preprocessing the plan passes the RELABELED graph, so
+    the schedule is computed over reordered degrees and keyed (in the
+    plan's per-graph memo) on the relabeled graph's identity — degree
+    multisets are permutation-invariant, so bucket counts match the
+    unreordered run's exactly while the per-dyad sort order follows the
+    relabeled stream the device actually executes.
     """
     u, v = canonical_dyads(g)
     deg = np.asarray(g.arrays.nbr_deg)

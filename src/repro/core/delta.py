@@ -26,7 +26,7 @@ import dataclasses
 
 import numpy as np
 
-from .graph import CSRGraph, from_edges
+from .graph import CSRGraph, arcs_host, from_edges
 
 __all__ = ["GraphDelta", "affected_dyads", "apply_delta_csr"]
 
@@ -100,6 +100,22 @@ class GraphDelta:
         return np.unique(np.concatenate([self.edges_added.ravel(),
                                          self.edges_removed.ravel()]))
 
+    def permuted(self, perm) -> "GraphDelta":
+        """The same mutation expressed in relabeled vertex ids: every
+        endpoint ``x`` becomes ``perm[x]``.  This is the boundary
+        translation the engine's ``reorder=`` path uses — callers express
+        deltas in original ids, and because
+        :func:`~repro.core.graph.from_edges` is canonical over arc sets,
+        applying the permuted delta to the permuted graph yields exactly
+        the permutation of the mutated graph."""
+        p = np.asarray(perm, dtype=np.int64)
+        return GraphDelta(
+            edges_added=p[self.edges_added] if len(self.edges_added)
+            else self.edges_added,
+            edges_removed=p[self.edges_removed] if len(self.edges_removed)
+            else self.edges_removed,
+        )
+
     def validate_for(self, g: CSRGraph) -> None:
         """Raise ``ValueError`` unless every endpoint is a vertex of ``g``."""
         if self.size and int(self.touched[-1]) >= g.n:
@@ -154,9 +170,7 @@ def apply_delta_csr(g: CSRGraph, delta: GraphDelta) -> CSRGraph:
     bit-identical to one built from the mutated edge list directly.
     The vertex count is preserved."""
     delta.validate_for(g)
-    out_ptr = np.asarray(g.arrays.out_ptr)[: g.n + 1]
-    dst = np.asarray(g.arrays.out_idx)[: g.m].astype(np.int64)
-    src = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(out_ptr))
+    src, dst = arcs_host(g)
     if len(delta.edges_removed):
         key = src * np.int64(g.n) + dst
         rem = (delta.edges_removed[:, 0] * np.int64(g.n)

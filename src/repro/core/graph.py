@@ -127,6 +127,18 @@ def from_edges(n: int, src, dst, *, directed: bool = True) -> CSRGraph:
     )
 
 
+def arcs_host(g: CSRGraph) -> "tuple[np.ndarray, np.ndarray]":
+    """Recover the directed arc list ``(src, dst)`` as host int64 arrays
+    from the out-CSR — the exact inverse of :func:`from_edges` for
+    deduplicated strict digraphs.  Used by graph rewrites that re-enter
+    ``from_edges`` (delta application, vertex relabeling): slicing to
+    ``g.n + 1`` / ``g.m`` keeps this correct on bucket-padded arrays."""
+    out_ptr = np.asarray(g.arrays.out_ptr)[: g.n + 1]
+    dst = np.asarray(g.arrays.out_idx)[: g.m].astype(np.int64)
+    src = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(out_ptr))
+    return src, dst
+
+
 def stack_graph_arrays(arrays: "list[GraphArrays]") -> GraphArrays:
     """Stack per-graph :class:`GraphArrays` into one batched pytree.
 

@@ -57,12 +57,20 @@ fault-free run in one device→host sync; a graceful-degradation ladder
 (pallas→xla on compile/runtime failure, dynamic→static on pool
 exhaustion) is recorded in ``Plan.degradation``.
 
+Locality-aware reordering (:mod:`repro.core.reorder`):
+``EngineConfig(reorder="degree"|"bfs"|"rcm")`` relabels vertices
+host-side once per (plan, graph) — memoized alongside the plan cache —
+runs every chunk on the relabeled graph, and maps raw bins back through
+the inverse permutation, so results stay bit-identical to
+``reorder="none"`` on every backend, schedule, and delta path while the
+CSR gathers of the memory-bound traversal turn near-sequential.
+
 Architecture walk-through: ``docs/ARCHITECTURE.md``; paper-concept index:
 ``docs/PAPER_MAPPING.md``.
 """
 from ..core.census import CensusResult
 from ..core.delta import GraphDelta, affected_dyads, apply_delta_csr
-from .config import BACKENDS, SCHEDULES, CensusConfig, EngineConfig
+from .config import BACKENDS, REORDERS, SCHEDULES, CensusConfig, EngineConfig
 from .delta import DeltaResult, delta_correction
 from .executor import (ChunkRetryError, ChunkTask, Executor,
                        PoolExhaustedError, WorkerFailures)
@@ -80,7 +88,7 @@ __all__ = [
     "ChunkRetryError", "ChunkTask", "DegreeStats", "DeltaResult",
     "DeviceLostError", "DyadCensus", "EngineConfig", "Executor",
     "FaultPlan", "GraphDelta", "GraphMeta", "GraphOp", "InjectedFault",
-    "Plan", "PlanShapeError", "PoolExhaustedError", "SCHEDULES",
+    "Plan", "PlanShapeError", "PoolExhaustedError", "REORDERS", "SCHEDULES",
     "TriadicProfile", "WorkerFailures", "affected_dyads",
     "apply_delta_csr", "clear_plan_cache", "compile", "compile_census",
     "delta_correction", "fault_plan_from_env", "get_op", "is_poisoned",

@@ -23,6 +23,7 @@ from .faults import FaultPlan
 
 BACKENDS = ("xla", "pallas", "distributed", "auto")
 SCHEDULES = ("static", "dynamic")
+REORDERS = ("none", "degree", "bfs", "rcm")
 
 _ACC_DTYPES = {"int32": jnp.int32, "int64": jnp.int64, "float32": jnp.float32}
 
@@ -118,6 +119,18 @@ class EngineConfig:
             or quarantined) re-runs the task list in-order on a single
             device instead of failing the run.  ``False`` re-raises
             :class:`~repro.engine.executor.PoolExhaustedError`.
+        reorder: locality-aware vertex relabeling applied before chunk
+            dispatch — ``"none"`` (default, no relabeling), ``"degree"``
+            (hubs first), ``"bfs"`` (Gorder-style frontier order) or
+            ``"rcm"`` (reverse Cuthill–McKee); see
+            :mod:`repro.core.reorder`.  The permutation is computed
+            host-side once per (plan, graph) and memoized, execution runs
+            on the relabeled graph, and raw bins map back through the
+            inverse permutation, so results stay bit-identical to
+            ``"none"`` for every registered op on every backend and
+            schedule — including through ``Plan.apply_delta``, whose
+            deltas stay in original vertex ids.  Part of the cache key —
+            reordered and plain plans never share compiled state.
         fault_plan: a deterministic
             :class:`~repro.engine.faults.FaultPlan` injected into this
             plan's dispatch paths (``None`` = inherit the
@@ -145,6 +158,7 @@ class EngineConfig:
     max_attempts: int = 3
     backend_fallback: bool = True
     schedule_fallback: bool = True
+    reorder: str = "none"
     fault_plan: Optional[FaultPlan] = None
 
     def __post_init__(self):
@@ -205,6 +219,12 @@ class EngineConfig:
                     f"{flag} must be a bool (got "
                     f"{getattr(self, flag)!r}); it toggles one rung of "
                     "the degradation ladder")
+        if self.reorder not in REORDERS:
+            raise ValueError(
+                f"reorder must be one of {REORDERS}, got {self.reorder!r}; "
+                "'none' disables relabeling, 'degree' packs hubs first, "
+                "'bfs' uses Gorder-style frontier order, 'rcm' is reverse "
+                "Cuthill-McKee")
         if self.fault_plan is not None and not isinstance(self.fault_plan,
                                                           FaultPlan):
             raise ValueError(

@@ -296,7 +296,17 @@ def run_delta(plan, g: CSRGraph, delta: GraphDelta,
     (``raw`` missing, footprint above ``config.delta_threshold``, the
     synchronous baseline path, or any op that opts out of the locality
     contract via ``delta_local=False``), applies it, and bumps the plan's
-    ``delta_runs`` / ``delta_fulls`` counters."""
+    ``delta_runs`` / ``delta_fulls`` counters.
+
+    Deltas stay in ORIGINAL vertex ids under ``config.reorder``: the
+    translation happens here, at the boundary.  The plan's memoized
+    permutation relabels the delta (:meth:`GraphDelta.permuted`) and both
+    subset passes run in relabeled space — ``apply_delta_csr`` commutes
+    with relabeling because ``from_edges`` is canonical over arc sets, so
+    the relabeled new graph IS the relabeling of the new graph (seeded
+    into the reorder memo: a mutation stream reuses one permutation and
+    every step stays warm).  The correction maps back through the inverse
+    permutation before folding — exact, because ``unpermute`` is linear."""
     g_new = apply_delta_csr(g, delta)
     plan._check(g_new)
     fplan = resolve_faults(plan.config.fault_plan)
@@ -318,30 +328,41 @@ def run_delta(plan, g: CSRGraph, delta: GraphDelta,
         # nothing can change: zero-cost, no device work, no sync.  (The
         # raw bins are still required — an empty delta is not a run.)
         if raw is None:
-            raw = plan._run_raw(g_new)
+            raw = plan._execute_raw(g_new)
             plan.stats["delta_fulls"] += 1
             return DeltaResult(g_new, raw, plan.layout.finalize(raw, g_new),
                                "full", 0.0)
         plan.stats["delta_runs"] += 1
         return DeltaResult(g_new, raw, plan.layout.finalize(raw, g_new),
                            "delta", 0.0)
-    affected_old = affected_dyads(g, delta)
-    affected_new = affected_dyads(g_new, delta)
-    frac = affected_fraction(g, g_new, len(affected_old[0]),
+    # reorder boundary: translate the mutation into the plan's execution
+    # (relabeled) vertex space and seed the mutated graph's memo entry.
+    g_x, perm = plan._reordered(g)
+    if perm is not None:
+        delta_x = delta.permuted(perm)
+        g_new_x = apply_delta_csr(g_x, delta_x)
+        plan._seed_reorder(g_new, g_new_x, perm)
+    else:
+        delta_x, g_new_x = delta, g_new
+    affected_old = affected_dyads(g_x, delta_x)
+    affected_new = affected_dyads(g_new_x, delta_x)
+    frac = affected_fraction(g_x, g_new_x, len(affected_old[0]),
                              len(affected_new[0]))
     use_delta = (raw is not None and plan.device_path
                  and frac <= plan.config.delta_threshold
                  and all(getattr(op, "delta_local", True)
                          for op in plan.ops))
     if use_delta:
-        corr = delta_correction(plan, g, g_new, delta,
+        corr = delta_correction(plan, g_x, g_new_x, delta_x,
                                 affected_old=affected_old,
                                 affected_new=affected_new)
+        if perm is not None:
+            corr = plan.layout.unpermute(corr, perm, g_new)
         raw_new = np.asarray(raw, dtype=np.int64) + corr
         plan.stats["delta_runs"] += 1
         mode = "delta"
     else:
-        raw_new = plan._run_raw(g_new)
+        raw_new = plan._execute_raw(g_new)
         plan.stats["delta_fulls"] += 1
         mode = "full"
     return DeltaResult(g_new, raw_new, plan.layout.finalize(raw_new, g_new),

@@ -171,6 +171,24 @@ class GraphOp:
         chunks never run on arc-free graphs."""
         raise NotImplementedError
 
+    def unpermute_raw(self, raw: np.ndarray, perm: np.ndarray,
+                      g: CSRGraph) -> np.ndarray:
+        """Map this kernel's raw bins from relabeled vertex space back to
+        the original — the inverse-permutation hook for the engine's
+        ``reorder=`` preprocessing (:mod:`repro.core.reorder`).
+
+        ``perm[old_id] = new_id`` is the relabeling execution ran under.
+        The default is the identity: every built-in op's bins are
+        vertex-anonymous aggregates (census counts, degree *histograms*),
+        which a relabeling cannot move between bins.  An op whose slice
+        is vertex-indexed (bin ``i`` belongs to vertex ``i``) must
+        override with the gather ``out[:n] = raw[perm]`` so its raw
+        contract stays ORIGINAL vertex ids under any ``reorder=``
+        strategy.  Must be linear in ``raw`` (a fixed gather/identity) —
+        the delta engine relies on ``unpermute(a + b) == unpermute(a) +
+        unpermute(b)`` to fold corrections computed in relabeled space."""
+        return raw
+
     def reference(self, g: CSRGraph) -> Any:
         """NumPy oracle: the op's result computed host-side, for parity
         tests and docs.  Intended for small graphs only."""
@@ -453,6 +471,7 @@ class OpLayout:
                     f"bins={op.bins} != {owners[key].bins} (the kernel "
                     f"owner's width) — sharers read the owner's slice and "
                     f"must agree on its size")
+        self._owners = owners
         self.bins = tuple(owners[k].bins for k in self.keys)
         edges = np.concatenate([[0], np.cumsum(self.bins)])
         self.slices = {k: slice(int(edges[i]), int(edges[i + 1]))
@@ -518,6 +537,24 @@ class OpLayout:
         if self._once_batch_jit is None and self.has_once:
             self._once_batch_jit = jax.jit(jax.vmap(self.once_kernel()))
         return self._once_batch_jit
+
+    def unpermute(self, raw, perm, g: CSRGraph) -> np.ndarray:
+        """Map fused raw bins from relabeled vertex space back to the
+        original, slice by slice, through each kernel owner's
+        :meth:`GraphOp.unpermute_raw` hook.  Returns ``raw`` unchanged
+        (no copy) when every owner keeps the identity default — the case
+        for all built-in ops, whose bins are vertex-anonymous."""
+        out = None
+        for k in self.keys:
+            op = self._owners[k]
+            if type(op).unpermute_raw is GraphOp.unpermute_raw:
+                continue
+            if out is None:
+                out = np.array(raw, dtype=np.int64, copy=True)
+            sl = self.slices[k]
+            out[sl] = np.asarray(op.unpermute_raw(out[sl], perm, g),
+                                 dtype=np.int64)
+        return raw if out is None else out
 
     def finalize(self, raw, g: CSRGraph) -> dict:
         """Per-op results from the fused raw bins: ``{op.name: result}``

@@ -28,6 +28,7 @@ import collections
 import dataclasses
 import functools
 import math
+import weakref
 from typing import Optional
 
 import jax
@@ -37,6 +38,7 @@ import numpy as np
 from ..core.census import CensusResult
 from ..core.graph import CSRGraph, GraphArrays
 from ..core.graph import next_pow2 as _next_pow2
+from ..core.reorder import compute_permutation, permute_graph
 from . import backends
 from .config import EngineConfig
 from .executor import Executor
@@ -130,7 +132,7 @@ class Plan:
         self.device_path = config.resolve_device_accum()
         self.stats = {"traces": 0, "runs": 0, "chunks": 0, "host_syncs": 0,
                       "batch_runs": 0, "batch_graphs": 0, "device_chunks": {},
-                      "delta_runs": 0, "delta_fulls": 0,
+                      "delta_runs": 0, "delta_fulls": 0, "reorders": 0,
                       "faults": dict(chunk_failures=0, retries=0,
                                      device_losses=0, quarantines=0,
                                      backend_fallbacks=0,
@@ -155,6 +157,10 @@ class Plan:
         # bounded per-graph memo of host-derived chunk schedules
         # (see repro.engine.backends._memo_tasks)
         self._task_memo: dict = {}
+        # bounded per-graph memo of reorder permutations + relabeled
+        # graphs (config.reorder != "none"): warm runs pay zero reorder
+        # cost.  Same lifetime/bound discipline as _task_memo.
+        self._reorder_memo: dict = {}
         # distributed: per-shard load summary of the most recent run
         # (a backends.TaskStats — plans are cached with a bounded LRU, so
         # only the (n_shards,) weights are retained, never the task arrays).
@@ -275,6 +281,55 @@ class Plan:
             arrays = arrays._replace(in_ptr=in_ptr, in_idx=in_idx)
         return arrays
 
+    # -- locality-aware reordering -------------------------------------------
+
+    def _seed_reorder(self, g: CSRGraph, g_exec: CSRGraph,
+                      perm: np.ndarray) -> None:
+        """Record ``(g -> (g_exec, perm))`` in the bounded reorder memo.
+
+        Keyed by graph identity with a weakref guard against id reuse
+        (the ``_memo_tasks`` discipline); bounded to 8 live graphs per
+        plan — mutation streams touch one or two.  The delta path seeds
+        the mutated graph's entry so a session's every step reuses ONE
+        permutation and stays warm.
+        """
+        memo = self._reorder_memo
+        while len(memo) >= 8:
+            memo.pop(next(iter(memo)))
+        memo[id(g)] = (weakref.ref(g), g_exec, perm)
+
+    def _reordered(self, g: CSRGraph):
+        """``(execution graph, perm)`` for this plan's ``reorder=`` policy.
+
+        ``("none")`` returns ``(g, None)`` — the zero-cost identity.
+        Otherwise the permutation (``perm[old_id] = new_id``, see
+        :mod:`repro.core.reorder`) is computed host-side ONCE per (plan,
+        graph) and memoized together with the relabeled graph; warm runs
+        pay nothing (``stats["reorders"]`` counts the cold computations).
+        Relabeling preserves every metadata bucket, so the execution
+        graph passes the same admission check the original did.
+        """
+        if self.config.reorder == "none":
+            return g, None
+        hit = self._reorder_memo.get(id(g))
+        if hit is not None and hit[0]() is g:
+            return hit[1], hit[2]
+        perm = compute_permutation(g, self.config.reorder)
+        g_exec = permute_graph(g, perm)
+        self.stats["reorders"] += 1
+        self._seed_reorder(g, g_exec, perm)
+        return g_exec, perm
+
+    def _execute_raw(self, g: CSRGraph) -> np.ndarray:
+        """Reorder-aware raw execution: relabel (memoized), dispatch the
+        backend on the execution graph, and map raw bins back through the
+        inverse permutation (identity for aggregate ops — see
+        ``GraphOp.unpermute_raw``), so the raw contract is always
+        ORIGINAL vertex space regardless of ``config.reorder``."""
+        g_exec, perm = self._reordered(g)
+        raw = self._run_raw(g_exec)
+        return raw if perm is None else self.layout.unpermute(raw, perm, g)
+
     # -- execution -----------------------------------------------------------
 
     def run(self, g: CSRGraph) -> dict:
@@ -295,11 +350,13 @@ class Plan:
         plan.run_raw(g)``, then advance it with :meth:`apply_delta` —
         ``layout.finalize(raw, g)`` recovers the per-op results at any
         point.  Counts as one run (same stats/sync accounting as
-        :meth:`run`)."""
+        :meth:`run`).  Raw bins are always in ORIGINAL vertex space: under
+        ``config.reorder`` the backend runs on the relabeled graph and the
+        bins map back through the inverse permutation before returning."""
         check_poisoned(g)
         self._check(g)
         self.stats["runs"] += 1
-        return self._run_raw(g)
+        return self._execute_raw(g)
 
     def apply_delta(self, g: CSRGraph, delta, raw=None) -> "DeltaResult":
         """Advance a census stream by one mutation batch — work
@@ -375,10 +432,16 @@ class Plan:
         self.stats["batch_runs"] += 1
         self.stats["batch_graphs"] += len(graphs)
         if self.backend == "xla" and self.device_path:
-            raws = backends.run_xla_batch(self, graphs)
-            return [self.layout.finalize(raw, g)
-                    for raw, g in zip(raws, graphs)]
-        return [self.layout.finalize(self._run_raw(g), g) for g in graphs]
+            # reorder each member (memoized) and batch the relabeled
+            # graphs — same buckets, so the vmapped unit is unchanged;
+            # raw bins map back per member before finalize.
+            pairs = [self._reordered(g) for g in graphs]
+            raws = backends.run_xla_batch(self, [ge for ge, _ in pairs])
+            return [self.layout.finalize(
+                        raw if perm is None
+                        else self.layout.unpermute(raw, perm, g), g)
+                    for raw, (_, perm), g in zip(raws, pairs, graphs)]
+        return [self.layout.finalize(self._execute_raw(g), g) for g in graphs]
 
     def batch_fn(self):
         """The vmapped batched unit (xla device path), built lazily.
@@ -607,12 +670,15 @@ def clear_plan_cache() -> None:
     Compiled XLA executables owned by the dropped plans become garbage;
     use in tests/benchmarks to force cold compiles.  Each plan's
     per-graph chunk-schedule memo (``_task_memo`` — the host-derived
-    pallas bucket schedules and cost-model boundaries) is cleared too:
-    the memo's lifetime is tied to the plan cache, so long-lived mutation
-    streams can drop every host-side schedule with one call.
+    pallas bucket schedules and cost-model boundaries) is cleared too,
+    as is its reorder memo (``_reorder_memo`` — the per-graph locality
+    permutations and relabeled graphs): both memos' lifetimes are tied to
+    the plan cache, so long-lived mutation streams can drop every
+    host-side schedule and permutation with one call.
     """
     for p in _PLAN_CACHE.values():
         p._task_memo.clear()
+        p._reorder_memo.clear()
     _PLAN_CACHE.clear()
     _CACHE_STATS.update(hits=0, misses=0, evictions=0)
 
@@ -637,7 +703,10 @@ def plan_cache_stats() -> dict:
     device, and
     ``task_memo``: live entries in the plan's bounded per-graph
     chunk-schedule memo, cleared with the cache by
-    :func:`clear_plan_cache`).  This is the introspection surface
+    :func:`clear_plan_cache`, and the locality policy — ``reorder``
+    (the plan's relabeling strategy) with ``reorder_memo``, the live
+    entries in its bounded per-graph permutation memo).  This is the
+    introspection surface
     :class:`repro.serve.CensusService` reports per-bucket stats from.
     """
     entries = [
@@ -646,7 +715,8 @@ def plan_cache_stats() -> dict:
              degradation=[dict(d) for d in p.degradation],
              device_path=p.device_path, chunk=p.chunk, ops=p.op_names,
              schedule=p.config.schedule, n_devices=p.executor.n_devices,
-             task_memo=len(p._task_memo),
+             task_memo=len(p._task_memo), reorder=p.config.reorder,
+             reorder_memo=len(p._reorder_memo),
              **{**p.stats,
                 "device_chunks": dict(p.stats["device_chunks"]),
                 "faults": dict(p.stats["faults"]),

@@ -1,0 +1,478 @@
+"""Locality-aware reordering: the permutation-equivariance harness.
+
+Core-layer checks (strategy permutations are bijective/deterministic,
+``permute_graph`` builds an isomorphic bucket-stable graph, deltas
+commute with relabeling), engine-level bit-identity of every registered
+op under ``reorder=`` on all three backends × both schedules, a
+hypothesis property test over RANDOM permutations (the invariance claim,
+not just the shipped strategies), the vertex-indexed ``unpermute_raw``
+hook, cross-feature interaction with ``Plan.apply_delta`` (deltas stay
+in original ids) and ``FaultPlan`` recovery, the one-sync / zero-retrace
+/ warm-zero-reorder-cost pins, the bounded reorder memo, cache-key
+separation + config validation, and a forced-8-device subprocess run."""
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (GraphDelta, apply_delta_csr, compute_permutation,
+                        from_edges, generators, inverse_permutation,
+                        locality_score, permute_graph)
+from repro.core.graph import dense_adjacency
+from repro.core.reorder import REORDER_STRATEGIES
+from repro.engine import (EngineConfig, FaultPlan, GraphOp, clear_plan_cache,
+                          compile, plan_cache_stats, register_op)
+from repro.engine.ops import unregister_op
+
+BACKENDS = ["xla", "pallas", "distributed"]
+ALL_OPS = ("triad_census", "dyad_census", "degree_stats", "triadic_profile")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    clear_plan_cache()
+    yield
+    clear_plan_cache()
+
+
+def _cfg(backend, **kw):
+    kw.setdefault("batch", 16)
+    kw.setdefault("chunk_dyads", 64)
+    return EngineConfig(backend=backend, **kw)
+
+
+def _assert_result_equal(got, want, ctx=""):
+    assert type(got) is type(want), (ctx, got, want)
+    for name, a, b in zip(type(got)._fields, got, want):
+        if isinstance(a, np.ndarray):
+            assert np.array_equal(a, b), (ctx, name, a, b)
+        else:
+            assert a == b, (ctx, name, a, b)
+
+
+def _assert_results_equal(got, want, ctx=""):
+    assert got.keys() == want.keys(), ctx
+    for name in got:
+        _assert_result_equal(got[name], want[name], f"{ctx}:{name}")
+
+
+def _assert_same_graph(a, b, ctx=""):
+    for f in ("n", "m", "m_nbr", "max_deg", "max_out_deg"):
+        assert getattr(a, f) == getattr(b, f), (ctx, f)
+    for f in ("out_ptr", "out_idx", "nbr_ptr", "nbr_idx", "nbr_deg"):
+        assert np.array_equal(np.asarray(getattr(a.arrays, f)),
+                              np.asarray(getattr(b.arrays, f))), (ctx, f)
+
+
+# ----------------------------------------------------------------------------
+# core layer: strategies, permute_graph, delta translation
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", REORDER_STRATEGIES)
+def test_permutation_is_bijective_and_deterministic(strategy):
+    g = generators.rmat(6, edge_factor=4, seed=0)
+    perm = compute_permutation(g, strategy)
+    assert perm.shape == (g.n,) and perm.dtype == np.int64
+    assert np.array_equal(np.sort(perm), np.arange(g.n))  # bijection
+    assert np.array_equal(perm, compute_permutation(g, strategy))
+    inv = inverse_permutation(perm)
+    assert np.array_equal(perm[inv], np.arange(g.n))
+    assert np.array_equal(inv[perm], np.arange(g.n))
+
+
+def test_compute_permutation_rejects_unknown_strategy():
+    g = generators.rmat(4, edge_factor=2, seed=0)
+    with pytest.raises(ValueError, match="degree"):
+        compute_permutation(g, "zorder")
+
+
+def test_degree_order_packs_hubs_first():
+    g = generators.rmat(6, edge_factor=4, seed=1)
+    perm = compute_permutation(g, "degree")
+    deg = np.asarray(g.arrays.nbr_deg)[: g.n]
+    # degree as a function of NEW id must be non-increasing
+    deg_new = deg[inverse_permutation(perm)]
+    assert (np.diff(deg_new) <= 0).all()
+
+
+@pytest.mark.parametrize("strategy", ["bfs", "rcm"])
+def test_locality_improves_on_shuffled_ring(strategy):
+    # a ring with scrambled labels: worst-case locality that any
+    # frontier/bandwidth order must repair by a wide margin.
+    n = 64
+    rng = np.random.default_rng(3)
+    lab = rng.permutation(n).astype(np.int64)
+    g = from_edges(n, lab[np.arange(n)], lab[(np.arange(n) + 1) % n])
+    perm = compute_permutation(g, strategy)
+    before = locality_score(g)
+    after = locality_score(permute_graph(g, perm))
+    assert after < before / 3, (strategy, before, after)
+
+
+@pytest.mark.parametrize("strategy", REORDER_STRATEGIES)
+def test_permute_graph_is_isomorphic_and_bucket_stable(strategy):
+    g = generators.rmat(6, edge_factor=4, seed=2)
+    perm = compute_permutation(g, strategy)
+    gp = permute_graph(g, perm)
+    # metadata (and hence every plan bucket) is invariant
+    for f in ("n", "m", "m_nbr", "max_deg", "max_out_deg"):
+        assert getattr(gp, f) == getattr(g, f), f
+    a, ap = dense_adjacency(g), dense_adjacency(gp)
+    assert np.array_equal(ap[np.ix_(perm, perm)], a)  # same digraph
+
+
+def test_permute_graph_identity_and_bad_shape():
+    g = generators.rmat(5, edge_factor=3, seed=0)
+    same = permute_graph(g, np.arange(g.n))
+    _assert_same_graph(same, g, "identity")
+    with pytest.raises(ValueError, match="shape"):
+        permute_graph(g, np.arange(g.n - 1))
+
+
+def test_strategies_handle_edgeless_and_disconnected_graphs():
+    edgeless = from_edges(5, [], [])
+    two_comp = from_edges(8, [0, 1, 4, 5, 6], [1, 2, 5, 6, 4])
+    for strategy in REORDER_STRATEGIES:
+        for g in (edgeless, two_comp):
+            perm = compute_permutation(g, strategy)
+            assert np.array_equal(np.sort(perm), np.arange(g.n))
+            permute_graph(g, perm)
+
+
+def test_apply_delta_commutes_with_relabeling():
+    g = generators.rmat(5, edge_factor=4, seed=4)
+    rng = np.random.default_rng(5)
+    perm = rng.permutation(g.n).astype(np.int64)
+    d = GraphDelta(edges_added=rng.integers(0, g.n, size=(4, 2)),
+                   edges_removed=[(1, 0), (0, 2)])
+    lhs = apply_delta_csr(permute_graph(g, perm), d.permuted(perm))
+    rhs = permute_graph(apply_delta_csr(g, d), perm)
+    _assert_same_graph(lhs, rhs, "commute")
+
+
+# ----------------------------------------------------------------------------
+# engine: bit-identity across strategies × backends × schedules
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("strategy", REORDER_STRATEGIES)
+def test_reordered_run_bit_identical_all_ops(backend, strategy):
+    g = generators.rmat(6, edge_factor=4, seed=6)
+    base = compile(g, ALL_OPS, _cfg(backend))
+    plan = compile(g, ALL_OPS, _cfg(backend, reorder=strategy))
+    assert np.array_equal(plan.run_raw(g), base.run_raw(g))
+    got, want = plan.run(g), base.run(g)
+    _assert_results_equal(got, want, f"{backend}:{strategy}")
+    # and against the NumPy oracles
+    from repro.engine import get_op
+    for name in ALL_OPS:
+        _assert_result_equal(got[name], get_op(name).reference(g),
+                             f"{backend}:{strategy}:{name}:ref")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_reordered_dynamic_schedule_bit_identical(backend):
+    g = generators.rmat(6, edge_factor=6, seed=7)
+    base = compile(g, ALL_OPS, _cfg(backend))
+    plan = compile(g, ALL_OPS, _cfg(backend, reorder="rcm",
+                                    schedule="dynamic"))
+    _assert_results_equal(plan.run(g), base.run(g), f"{backend}:dynamic")
+
+
+def test_random_permutation_equivariance_seeded():
+    # always-on random-permutation coverage (the hypothesis variant below
+    # skips when the library is absent): 10 seeded arbitrary relabelings,
+    # raw bins and every op result bit-identical on all of them.
+    g = generators.rmat(5, edge_factor=3, seed=23)
+    plan = compile(g, ALL_OPS, _cfg("xla"))
+    want, raw_want = plan.run(g), plan.run_raw(g)
+    rng = np.random.default_rng(24)
+    for trial in range(10):
+        gp = permute_graph(g, rng.permutation(g.n).astype(np.int64))
+        assert np.array_equal(plan.run_raw(gp), raw_want), trial
+        _assert_results_equal(plan.run(gp), want, f"trial{trial}")
+
+
+def test_random_permutation_equivariance_property():
+    # the headline invariance, for ARBITRARY permutations: every
+    # registered op's result is identical on any relabeling of the graph
+    # (results are vertex-anonymous aggregates; bit-identity comes from
+    # exact integer accumulation).
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    g = generators.rmat(5, edge_factor=3, seed=8)
+    plan = compile(g, ALL_OPS, _cfg("xla"))
+    want = plan.run(g)
+    raw_want = plan.run_raw(g)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.permutations(range(g.n)))
+    def prop(perm):
+        gp = permute_graph(g, np.asarray(perm, dtype=np.int64))
+        assert np.array_equal(plan.run_raw(gp), raw_want)
+        _assert_results_equal(plan.run(gp), want, "random-perm")
+
+    prop()
+
+
+def test_reordered_run_batch_matches_member_runs():
+    g1 = generators.rmat(6, edge_factor=4, seed=9)
+    g2 = apply_delta_csr(g1, GraphDelta(edges_added=[(0, 3), (9, 2)]))
+    base = compile(g1, ALL_OPS, _cfg("xla"))
+    plan = compile(g1, ALL_OPS, _cfg("xla", reorder="degree"))
+    got = plan.run_batch([g1, g2])
+    for res, g in zip(got, (g1, g2)):
+        _assert_results_equal(res, base.run(g), "batch")
+
+
+# ----------------------------------------------------------------------------
+# the unpermute hook: vertex-indexed raw bins
+# ----------------------------------------------------------------------------
+
+class _VertexOutDegOp(GraphOp):
+    """Test-only op whose raw slice is VERTEX-INDEXED (bin i = out-degree
+    of vertex i) — exercises the inverse-permutation hook that aggregate
+    built-ins never need."""
+
+    name = "_vertex_outdeg"
+    bins = 32
+
+    def make_once_fn(self, meta, config):
+        B = self.bins
+
+        def once(arrays, n):
+            nb = arrays.out_ptr.shape[0] - 1
+            deg = (arrays.out_ptr[1:] - arrays.out_ptr[:-1]).astype(
+                config.acc_jnp_dtype)
+            deg = jnp.where(jnp.arange(nb) < n, deg, 0)
+            return jnp.zeros(B, config.acc_jnp_dtype).at[:nb].add(deg[:B])
+
+        return once
+
+    def finalize(self, raw, g):
+        return np.asarray(raw[: g.n], dtype=np.int64)
+
+    def unpermute_raw(self, raw, perm, g):
+        out = np.array(raw, dtype=np.int64)
+        out[: g.n] = raw[np.asarray(perm)]
+        return out
+
+    def reference(self, g):
+        return np.diff(np.asarray(g.arrays.out_ptr)[: g.n + 1]).astype(
+            np.int64)
+
+
+@pytest.fixture
+def _vertex_op():
+    op = register_op(_VertexOutDegOp(), overwrite=True)
+    yield op
+    unregister_op(op.name)
+
+
+def test_vertex_indexed_op_unpermutes_raw_bins(_vertex_op):
+    g = generators.rmat(5, edge_factor=4, seed=10)  # n = 32 = op.bins
+    ops = ("triad_census", _vertex_op.name)
+    base = compile(g, ops, _cfg("xla"))
+    want_raw = base.run_raw(g)
+    for strategy in REORDER_STRATEGIES:
+        plan = compile(g, ops, _cfg("xla", reorder=strategy))
+        # raw contract: ORIGINAL vertex space, regardless of reorder
+        assert np.array_equal(plan.run_raw(g), want_raw), strategy
+        got = plan.run(g)
+        assert np.array_equal(got[_vertex_op.name],
+                              _vertex_op.reference(g)), strategy
+        _assert_result_equal(got["triad_census"],
+                             base.run(g)["triad_census"], strategy)
+
+
+def test_vertex_indexed_op_through_delta(_vertex_op):
+    g = generators.rmat(5, edge_factor=4, seed=11)
+    ops = ("triad_census", _vertex_op.name)
+    plan = compile(g, ops, _cfg("xla", reorder="rcm", delta_threshold=1.0))
+    raw = plan.run_raw(g)
+    res = plan.apply_delta(g, GraphDelta(edges_added=[(0, 7), (3, 9)],
+                                         edges_removed=[(1, 0)]), raw)
+    assert res.mode == "delta"
+    assert np.array_equal(res.results[_vertex_op.name],
+                          _vertex_op.reference(res.graph))
+    base = compile(g, ops, _cfg("xla"))
+    assert np.array_equal(res.raw, base.run_raw(res.graph))
+
+
+# ----------------------------------------------------------------------------
+# cross-feature: deltas in original ids, fault recovery
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_reorder_delta_bit_identical_to_full_recompute(backend):
+    g = generators.rmat(6, edge_factor=4, seed=12)
+    plan = compile(g, ALL_OPS, _cfg(backend, reorder="rcm",
+                                    delta_threshold=1.0))
+    base = compile(g, ALL_OPS, _cfg(backend))
+    raw = plan.run_raw(g)
+    rng = np.random.default_rng(13)
+    d = GraphDelta(edges_added=rng.integers(0, g.n, size=(4, 2)),
+                   edges_removed=[(1, 0)])
+    res = plan.apply_delta(g, d, raw)  # delta in ORIGINAL vertex ids
+    assert res.mode == "delta", backend
+    _assert_same_graph(res.graph, apply_delta_csr(g, d), backend)
+    assert np.array_equal(res.raw, base.run_raw(res.graph)), backend
+    _assert_results_equal(res.results, base.run(res.graph), backend)
+
+
+def test_reorder_soak_mutation_stream():
+    # deterministic 12-step soak mirroring test_delta's: a reordered
+    # plan's delta stream stays bit-identical to plain full recomputes,
+    # pays ONE permutation for the whole stream, and one sync per step.
+    g = generators.rmat(6, edge_factor=4, seed=14)
+    plan = compile(g, ALL_OPS, _cfg("xla", reorder="bfs",
+                                    delta_threshold=1.0))
+    base = compile(g, ALL_OPS, _cfg("xla"))
+    raw = plan.run_raw(g)
+    rng = np.random.default_rng(15)
+    for step in range(12):
+        add = rng.integers(0, g.n, size=(2, 2))
+        rem = rng.integers(0, g.n, size=(1, 2))
+        before = plan.stats["host_syncs"]
+        res = plan.apply_delta(g, GraphDelta(edges_added=add,
+                                             edges_removed=rem), raw)
+        if res.mode == "delta":
+            assert plan.stats["host_syncs"] - before == 1, step
+        assert np.array_equal(res.raw, base.run_raw(res.graph)), step
+        g, raw = res.graph, res.raw
+    assert plan.stats["reorders"] == 1  # one permutation for 12 mutations
+
+
+def test_reorder_fault_recovery_bit_identical():
+    g = generators.rmat(6, edge_factor=6, seed=16)
+    want = compile(g, ALL_OPS, _cfg("xla")).run(g)
+    plan = compile(g, ALL_OPS, _cfg(
+        "xla", reorder="rcm",
+        fault_plan=FaultPlan(seed=3, chunk_failure_rate=0.5,
+                             fail_attempts=1)))
+    before = plan.stats["host_syncs"]
+    _assert_results_equal(plan.run(g), want, "faulty-reordered")
+    assert plan.stats["faults"]["retries"] > 0
+    assert plan.stats["host_syncs"] - before == 1
+
+
+def test_reorder_fault_recovery_dynamic_device_loss():
+    g = generators.rmat(6, edge_factor=6, seed=17)
+    want = compile(g, ALL_OPS, _cfg("xla")).run(g)
+    plan = compile(g, ALL_OPS, _cfg(
+        "xla", reorder="degree", schedule="dynamic",
+        fault_plan=FaultPlan(seed=4, chunk_failure_rate=0.3,
+                             fail_attempts=1, device_loss=(1,))))
+    _assert_results_equal(plan.run(g), want, "device-loss-reordered")
+    assert plan.stats["faults"]["retries"] > 0
+
+
+# ----------------------------------------------------------------------------
+# regression pins: syncs, retraces, warm reorder cost, bounded memo
+# ----------------------------------------------------------------------------
+
+def test_reordered_one_sync_zero_retrace_zero_rereorder_warm():
+    g1 = generators.rmat(6, edge_factor=4, seed=18)
+    g2 = apply_delta_csr(g1, GraphDelta(edges_added=[(0, 5)]))  # same bucket
+    plan = compile(g1, ALL_OPS, _cfg("xla", reorder="rcm"))
+    plan.run(g1)  # cold: trace + permutation
+    traces = plan.stats["traces"]
+    assert plan.stats["reorders"] == 1
+    before = plan.stats["host_syncs"]
+    plan.run(g1)  # warm same graph: no retrace, no re-permute, one sync
+    assert plan.stats["host_syncs"] - before == 1
+    assert plan.stats["traces"] == traces
+    assert plan.stats["reorders"] == 1
+    before = plan.stats["host_syncs"]
+    plan.run(g2)  # warm same-bucket graph: new permutation, same trace
+    assert plan.stats["host_syncs"] - before == 1
+    assert plan.stats["traces"] == traces
+    assert plan.stats["reorders"] == 2
+
+
+def test_reorder_memo_bounded_surfaced_and_cleared():
+    g = generators.rmat(5, edge_factor=3, seed=19)
+    plan = compile(g, ("triad_census",), _cfg("xla", reorder="degree"))
+    # 12 distinct same-bucket graphs: drop one different arc each (removal
+    # can never outgrow the plan's metadata buckets)
+    from repro.core import arcs_host
+    src, dst = arcs_host(g)
+    graphs = [g] + [
+        apply_delta_csr(g, GraphDelta(edges_removed=[(src[i], dst[i])]))
+        for i in range(11)]
+    for gi in graphs:
+        plan.run(gi)
+    assert 0 < len(plan._reorder_memo) <= 8  # bounded
+    entry = plan_cache_stats()["entries"][-1]
+    assert entry["reorder"] == "degree"
+    assert entry["reorder_memo"] == len(plan._reorder_memo)
+    clear_plan_cache()
+    assert len(plan._reorder_memo) == 0
+    assert plan_cache_stats()["size"] == 0
+
+
+# ----------------------------------------------------------------------------
+# config validation + plan-cache key separation
+# ----------------------------------------------------------------------------
+
+def test_config_rejects_unknown_reorder_with_strategy_list():
+    with pytest.raises(ValueError) as e:
+        EngineConfig(reorder="hilbert")
+    msg = str(e.value)
+    for name in ("none", "degree", "bfs", "rcm"):
+        assert name in msg
+
+
+def test_reorder_is_part_of_plan_cache_key():
+    g = generators.rmat(5, edge_factor=3, seed=21)
+    plain = compile(g, ("triad_census",), _cfg("xla"))
+    assert compile(g, ("triad_census",), _cfg("xla", reorder="none")) is plain
+    plans = {s: compile(g, ("triad_census",), _cfg("xla", reorder=s))
+             for s in REORDER_STRATEGIES}
+    objs = [plain, *plans.values()]
+    assert len({id(p) for p in objs}) == len(objs)  # no shared state
+    assert plan_cache_stats()["size"] == len(objs)
+    for s, p in plans.items():
+        assert compile(g, ("triad_census",), _cfg("xla", reorder=s)) is p
+
+
+# ----------------------------------------------------------------------------
+# forced 8-device pool (subprocess)
+# ----------------------------------------------------------------------------
+
+def test_reorder_under_forced_device_pool():
+    code = """
+import numpy as np, jax
+assert len(jax.devices()) == 8
+from repro.core import GraphDelta, generators
+from repro.engine import EngineConfig, compile
+g = generators.rmat(7, edge_factor=4, seed=22)
+ops = ("triad_census", "dyad_census", "degree_stats", "triadic_profile")
+for backend in ("xla", "pallas"):
+    base = compile(g, ops, EngineConfig(backend=backend, batch=16,
+                                        chunk_dyads=64))
+    plan = compile(g, ops, EngineConfig(backend=backend, batch=16,
+                                        chunk_dyads=64, schedule="dynamic",
+                                        reorder="rcm", delta_threshold=1.0))
+    assert plan.executor.n_devices == 8
+    assert np.array_equal(plan.run_raw(g), base.run_raw(g)), backend
+    rng = np.random.default_rng(0)
+    res = plan.apply_delta(g, GraphDelta(
+        edges_added=rng.integers(0, g.n, size=(6, 2))), plan.run_raw(g))
+    assert res.mode == "delta", backend
+    assert np.array_equal(res.raw, base.run_raw(res.graph)), backend
+print('OK')
+"""
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": SRC}
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout

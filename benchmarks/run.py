@@ -830,6 +830,104 @@ def bench_reorder(scale: float, *, smoke: bool = False,
     print(f"# wrote {out}")
 
 
+def bench_partition(scale: float, *, smoke: bool = False,
+                    out: str = "BENCH_census.json"):
+    """``--partition``: sharded-CSR partitioned execution, 1 vs 8 shards
+    over 8 virtual devices, spill off/on.
+
+    Runs the census on a degree-skewed R-MAT graph unpartitioned, then
+    ``partitions=8`` (contiguous vertex-range shards balanced by owned
+    dyads + halo rows) with the dynamic schedule over the device pool,
+    then ``partitions=8, spill=...`` staging each shard's dyad list
+    through memory-mapped scratch files.  Bit-identity with the
+    unpartitioned raw result and the ONE device→host sync per run are
+    asserted **before** any timing.  Like ``--executor``, this re-execs
+    itself once under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    when only one CPU device is visible.  Results merge into
+    ``BENCH_census.json`` under ``"partition"``: per-case warm times,
+    shard dyad balance, halo sizes, and spill staging bytes vs the full
+    stream bytes.
+    """
+    import os
+    import tempfile
+
+    n_dev = len(jax.devices())
+    if (n_dev < 2 and jax.default_backend() == "cpu"
+            and not os.environ.get("_REPRO_PARTITION_REEXEC")):
+        import subprocess
+        import sys
+        env = {**os.environ, "_REPRO_PARTITION_REEXEC": "1"}
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count=8"
+                            ).strip()
+        cmd = [sys.executable, __file__, "--partition", "--scale",
+               str(scale), "--out", out] + (["--smoke"] if smoke else [])
+        r = subprocess.run(cmd, env=env)
+        if r.returncode:
+            raise RuntimeError(
+                f"partition bench subprocess failed ({r.returncode})")
+        return  # child merged its 'partition' section into the JSON
+
+    from repro.core import generators
+    from repro.engine import EngineConfig, clear_plan_cache, compile
+
+    if smoke:
+        g = generators.rmat(10, edge_factor=8, seed=0)
+        chunk, reps = 512, 3
+    else:
+        g = generators.rmat(13, edge_factor=8, seed=0)
+        chunk, reps = 2048, 4
+    clear_plan_cache()
+    scratch = tempfile.mkdtemp(prefix="bench-spill-")
+    cases = [("p1", dict()),
+             ("p8", dict(partitions=8, schedule="dynamic")),
+             ("p8-spill", dict(partitions=8, schedule="dynamic",
+                               spill=scratch))]
+    plans, baseline = [], None
+    for name, kw in cases:
+        cfg = EngineConfig(backend="xla", batch=256, chunk_dyads=chunk,
+                           **kw)
+        plan = compile(g, ("triad_census",), cfg)
+        s0 = plan.stats["host_syncs"]
+        raw = plan.run_raw(g)  # warm + correctness gate before timing
+        assert plan.stats["host_syncs"] - s0 == 1, name  # ONE sync
+        baseline = raw if baseline is None else baseline
+        assert np.array_equal(raw, baseline), name  # bit-identity
+        plans.append(plan)
+    warms = [float("inf")] * len(plans)
+    for _ in range(reps):
+        for i, plan in enumerate(plans):
+            t0 = time.perf_counter()
+            plan.run_raw(g)
+            warms[i] = min(warms[i], time.perf_counter() - t0)
+    rows = []
+    for (name, _), plan, warm in zip(cases, plans, warms):
+        row = dict(case=name, partitions=plan.partitions, warm_s=warm,
+                   dyads_per_sec=g.n_dyads / max(warm, 1e-9))
+        ps = plan.stats.get("partition")
+        if ps:
+            row.update(shard_dyads=list(ps["shard_dyads"]),
+                       halo_sizes=list(ps["halo_sizes"]),
+                       spill=bool(ps["spill"]),
+                       max_stage_bytes=int(ps["max_stage_bytes"]),
+                       stream_bytes=int(ps["stream_bytes"]))
+        rows.append(row)
+        print(f"census_partition_{name},{warm * 1e6:.0f},"
+              f"dyads_per_sec={row['dyads_per_sec']:.0f}")
+    overhead = warms[1] / max(warms[0], 1e-9)
+    spill_tax = warms[2] / max(warms[1], 1e-9)
+    print(f"census_partition_overhead,0,p8_vs_p1={overhead:.2f}x"
+          f",spill_tax={spill_tax:.2f}x")
+    _merge_json(out, schema=1, jax_backend=jax.default_backend(),
+                partition=dict(smoke=smoke, n_devices_visible=n_dev,
+                               graph=dict(n=g.n, m=g.m, dyads=g.n_dyads),
+                               results=rows, p8_overhead=overhead,
+                               spill_tax=spill_tax))
+    import shutil
+    shutil.rmtree(scratch, ignore_errors=True)
+    print(f"# wrote {out}")
+
+
 def bench_lm_smoke(scale: float):
     """Framework-side: smoke-scale train-step latency per arch."""
     from repro.config import RunConfig, get_config, list_configs
@@ -887,6 +985,13 @@ def main() -> None:
                          "reorder strategy (none/degree/bfs/rcm) on a "
                          "label-scrambled degree-skewed graph (merges a "
                          "'reorder' section into the JSON)")
+    ap.add_argument("--partition", action="store_true",
+                    help="partition bench: sharded-CSR runs, 1 vs 8 "
+                         "shards over 8 virtual devices, spill off/on, "
+                         "bit-identity + one-sync asserted before timing "
+                         "(merges a 'partition' section into the JSON; "
+                         "re-execs itself under forced 8 host devices "
+                         "when needed)")
     ap.add_argument("--sync-baseline", action="store_true",
                     help="also time the synchronous (device_accum=False) "
                          "data path for an A/B speedup in the JSON")
@@ -917,6 +1022,9 @@ def main() -> None:
     if args.reorder:
         bench_reorder(args.scale, smoke=args.smoke, out=args.out)
         return
+    if args.partition:
+        bench_partition(args.scale, smoke=args.smoke, out=args.out)
+        return
     if args.smoke:
         device_pipeline(args.scale)
         return
@@ -933,6 +1041,7 @@ def main() -> None:
         "executor": lambda s: bench_executor(s, smoke=False, out=args.out),
         "delta": lambda s: bench_delta(s, smoke=False, out=args.out),
         "faults": lambda s: bench_faults(s, smoke=False, out=args.out),
+        "partition": lambda s: bench_partition(s, smoke=False, out=args.out),
         "lm_smoke": bench_lm_smoke,
     }
     only = [s for s in args.only.split(",") if s]

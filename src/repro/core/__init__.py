@@ -10,8 +10,11 @@ from .census import (CensusResult, brute_force_census, canonical_dyads,
 from .balance import ShardedTasks, dyad_weights, exact_s_sizes, pack_tasks
 from .delta import GraphDelta, affected_dyads, apply_delta_csr
 from .distributed import distributed_triad_census, make_distributed_census_fn
-from .graph import (CSRGraph, GraphArrays, arcs_host, from_edges,
-                    load_pajek_or_edgelist, stack_graph_arrays)
+from .graph import (CSRGraph, GraphArrays, arcs_host, arcs_host_iter,
+                    from_edges, from_edges_mmap, load_pajek_or_edgelist,
+                    stack_graph_arrays)
+from .partition import (GraphPartition, partition_cuts, partition_graph,
+                        shard_dyads)
 from .reorder import (REORDER_STRATEGIES, compute_permutation,
                       inverse_permutation, locality_score, permute_graph)
 from .triad_table import TRIAD_NAMES, TRIAD_TABLE_64
@@ -22,11 +25,15 @@ _ENGINE_EXPORTS = ("CensusConfig", "CensusPlan", "GraphMeta",
 __all__ = [
     "CensusResult", "CSRGraph", "GraphArrays", "GraphDelta",
     "REORDER_STRATEGIES", "ShardedTasks", "TRIAD_NAMES", "TRIAD_TABLE_64",
-    "affected_dyads", "apply_delta_csr", "arcs_host", "brute_force_census",
+    "GraphPartition",
+    "affected_dyads", "apply_delta_csr", "arcs_host", "arcs_host_iter",
+    "brute_force_census",
     "canonical_dyads", "compute_permutation", "distributed_triad_census",
-    "dyad_weights", "exact_s_sizes", "from_edges", "inverse_permutation",
+    "dyad_weights", "exact_s_sizes", "from_edges", "from_edges_mmap",
+    "inverse_permutation",
     "load_pajek_or_edgelist", "locality_score", "make_census_fn",
-    "make_distributed_census_fn", "pack_tasks", "permute_graph",
+    "make_distributed_census_fn", "pack_tasks", "partition_cuts",
+    "partition_graph", "permute_graph", "shard_dyads",
     "stack_graph_arrays", "triad_census", *_ENGINE_EXPORTS,
 ]
 

@@ -76,13 +76,11 @@ def _build_csr(n: int, rows: np.ndarray, cols: np.ndarray):
     return ptr.astype(np.int32), cols.astype(np.int32)
 
 
-def from_edges(n: int, src, dst, *, directed: bool = True) -> CSRGraph:
-    """Build a :class:`CSRGraph` from arc lists.
-
-    Self-loops are dropped (the algorithm targets strict digraphs) and
-    duplicate arcs are deduplicated, as in the paper's pre-processing stage.
-    For ``directed=False`` every edge is materialized as a mutual dyad.
-    """
+def _build_host_arrays(n: int, src, dst, *, directed: bool = True):
+    """The host-side (numpy) half of :func:`from_edges`: canonicalize the
+    arc list and build both CSRs.  Returns ``(host GraphArrays, m, m_nbr,
+    max_deg, max_out_deg)`` — shared by the device-resident and
+    memory-mapped constructors so both are canonical over arc sets."""
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
     if src.size:
@@ -109,22 +107,74 @@ def from_edges(n: int, src, dst, *, directed: bool = True) -> CSRGraph:
     nbr_ptr, nbr_idx = _build_csr(n, usrc, udst)
     deg = (nbr_ptr[1:] - nbr_ptr[:-1]).astype(np.int32)
     out_deg = out_ptr[1:] - out_ptr[:-1]
+    arrays = GraphArrays(out_ptr=out_ptr, out_idx=out_idx, nbr_ptr=nbr_ptr,
+                         nbr_idx=nbr_idx, nbr_deg=deg)
+    return (arrays, int(src.size), int(usrc.size),
+            int(deg.max()) if n and deg.size else 0,
+            int(out_deg.max()) if n and out_deg.size else 0)
 
+
+def from_edges(n: int, src, dst, *, directed: bool = True) -> CSRGraph:
+    """Build a :class:`CSRGraph` from arc lists.
+
+    Self-loops are dropped (the algorithm targets strict digraphs) and
+    duplicate arcs are deduplicated, as in the paper's pre-processing stage.
+    For ``directed=False`` every edge is materialized as a mutual dyad.
+    """
+    host, m, m_nbr, max_deg, max_out_deg = _build_host_arrays(
+        n, src, dst, directed=directed)
     arrays = GraphArrays(
-        out_ptr=jnp.asarray(out_ptr),
-        out_idx=jnp.asarray(out_idx),
-        nbr_ptr=jnp.asarray(nbr_ptr),
-        nbr_idx=jnp.asarray(nbr_idx),
-        nbr_deg=jnp.asarray(deg),
+        out_ptr=jnp.asarray(host.out_ptr),
+        out_idx=jnp.asarray(host.out_idx),
+        nbr_ptr=jnp.asarray(host.nbr_ptr),
+        nbr_idx=jnp.asarray(host.nbr_idx),
+        nbr_deg=jnp.asarray(host.nbr_deg),
     )
-    return CSRGraph(
-        n=n,
-        m=int(src.size),
-        m_nbr=int(usrc.size),
-        max_deg=int(deg.max()) if n and deg.size else 0,
-        max_out_deg=int(out_deg.max()) if n and out_deg.size else 0,
-        arrays=arrays,
-    )
+    return CSRGraph(n=n, m=m, m_nbr=m_nbr, max_deg=max_deg,
+                    max_out_deg=max_out_deg, arrays=arrays)
+
+
+def from_edges_mmap(n: int, src, dst, *, directed: bool = True,
+                    dir: "str | None" = None) -> CSRGraph:
+    """Build a :class:`CSRGraph` whose arrays are **memory-mapped** host
+    ``.npy`` files — the out-of-core constructor.
+
+    Canonicalization is identical to :func:`from_edges` (same helper, so
+    the two are bit-identical over the same arc set); the CSR arrays are
+    then written to ``dir`` (a fresh temp directory when ``None``) and
+    reopened read-only with ``mmap_mode="r"``, so the returned graph
+    holds O(1) resident RAM per array and pages rows in on demand.  The
+    partitioned engine (:mod:`repro.engine.partition`) and
+    :func:`arcs_host_iter` slice these arrays one vertex range at a time,
+    which is what lets a dyad stream larger than host RAM complete.
+    Numpy treats a memmap as an ndarray and jax converts lazily, so an
+    mmap-backed graph is accepted everywhere a device-backed one is — at
+    the cost of a host→device upload on first full-array use.
+    """
+    import os
+    import tempfile
+
+    host, m, m_nbr, max_deg, max_out_deg = _build_host_arrays(
+        n, src, dst, directed=directed)
+    d = dir if dir is not None else tempfile.mkdtemp(prefix="repro-graph-")
+    os.makedirs(d, exist_ok=True)
+
+    def spill(name: str, arr: np.ndarray):
+        if arr.size == 0:  # np.memmap rejects zero-length buffers
+            return arr
+        path = os.path.join(d, f"{name}.npy")
+        mm = np.lib.format.open_memmap(path, mode="w+", dtype=arr.dtype,
+                                       shape=arr.shape)
+        mm[:] = arr
+        mm.flush()
+        del mm
+        return np.load(path, mmap_mode="r")
+
+    arrays = GraphArrays(**{f: spill(f, v) for f, v in
+                            zip(("out_ptr", "out_idx", "nbr_ptr", "nbr_idx",
+                                 "nbr_deg"), host[:5])})
+    return CSRGraph(n=n, m=m, m_nbr=m_nbr, max_deg=max_deg,
+                    max_out_deg=max_out_deg, arrays=arrays)
 
 
 def arcs_host(g: CSRGraph) -> "tuple[np.ndarray, np.ndarray]":
@@ -137,6 +187,34 @@ def arcs_host(g: CSRGraph) -> "tuple[np.ndarray, np.ndarray]":
     dst = np.asarray(g.arrays.out_idx)[: g.m].astype(np.int64)
     src = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(out_ptr))
     return src, dst
+
+
+def arcs_host_iter(g: CSRGraph, *, cuts=None, block: int = 1 << 16):
+    """Stream the directed arc list shard-at-a-time: yields one
+    ``(src, dst)`` int64 pair per contiguous vertex range, reading only
+    that range's CSR rows per step — O(range) resident host memory on an
+    mmap-backed graph (:func:`from_edges_mmap`), where :func:`arcs_host`
+    would materialize the full list.  Ranges come from ``cuts`` (e.g.
+    :func:`repro.core.partition.partition_cuts`, to iterate exactly the
+    engine's shards) or fixed ``block``-sized strides.  Concatenating
+    every yield reproduces :func:`arcs_host` exactly."""
+    ptr = g.arrays.out_ptr
+    ptr = (ptr if isinstance(ptr, np.ndarray)
+           else np.asarray(ptr))[: g.n + 1].astype(np.int64)
+    idx = g.arrays.out_idx
+    if not isinstance(idx, np.ndarray):  # fetch device arrays ONCE
+        idx = np.asarray(idx)
+    bounds = (np.asarray(cuts, dtype=np.int64) if cuts is not None
+              else np.arange(0, g.n + block, block,
+                             dtype=np.int64).clip(max=g.n))
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        lo, hi = int(lo), int(hi)
+        if hi <= lo:
+            continue
+        dst = np.asarray(idx[ptr[lo]:ptr[hi]], dtype=np.int64)
+        src = np.repeat(np.arange(lo, hi, dtype=np.int64),
+                        np.diff(ptr[lo:hi + 1]))
+        yield src, dst
 
 
 def stack_graph_arrays(arrays: "list[GraphArrays]") -> GraphArrays:

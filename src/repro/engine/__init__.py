@@ -57,6 +57,22 @@ fault-free run in one device→host sync; a graceful-degradation ladder
 (pallas→xla on compile/runtime failure, dynamic→static on pool
 exhaustion) is recorded in ``Plan.degradation``.
 
+Partitioned graphs & out-of-core (:mod:`repro.core.partition`,
+:mod:`repro.engine.partition`): ``EngineConfig(partitions=P)`` splits
+the CSR itself into P contiguous vertex-range shards balanced by owned
+canonical dyads, each carrying a local CSR plus a **halo** of the remote
+neighbor rows its dyads read (exactly the ``delta_local`` locality
+contract), and runs the census one shard context at a time through the
+plan's own chunk machinery — per-device memory is bounded by the
+largest shard, results stay bit-identical to the unpartitioned path on
+every backend/schedule/op, shard accumulators merge exactly on the
+primary device, and the run still costs ONE device→host sync.
+``spill=True`` (or a scratch path) stages shard dyad lists through
+memory-mapped files, pairing with
+:func:`repro.core.graph.from_edges_mmap` so graphs and dyad streams
+larger than device or host memory complete.  A delta on a partitioned
+plan rebuilds only the shards owning its endpoints' ranges.
+
 Locality-aware reordering (:mod:`repro.core.reorder`):
 ``EngineConfig(reorder="degree"|"bfs"|"rcm")`` relabels vertices
 host-side once per (plan, graph) — memoized alongside the plan cache —

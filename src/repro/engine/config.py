@@ -138,6 +138,30 @@ class EngineConfig:
             inert ``FaultPlan()`` opts out even under the environment
             hook).  Part of the cache key — faulty and clean plans never
             share compiled state.
+        partitions: number of contiguous vertex-range graph shards
+            (``None``/``1`` = the unpartitioned single-device CSR).
+            With ``partitions > 1`` the engine splits the CSR into
+            owned-dyad-balanced vertex ranges, builds each shard a local
+            CSR plus a halo of remote neighbor rows, and runs the census
+            one shard context at a time — per-device memory is bounded by
+            the LARGEST SHARD, not the graph, results stay bit-identical
+            to the unpartitioned path for every registered op on every
+            backend and schedule, and the run still costs ONE device→host
+            sync (shard accumulators merge on the primary device).  See
+            :mod:`repro.engine.partition`.  Requires the device-resident
+            path (``device_accum`` must not be ``False``) and every op to
+            honor the ``delta_local`` locality contract.  Part of the
+            cache key.
+        spill: out-of-core staging for partitioned runs — ``None``/
+            ``False`` (default) stages each shard's dyad list in host
+            RAM; ``True`` stages it through memory-mapped scratch files
+            in a fresh temp directory (removed after the run); a string
+            names the scratch directory to use.  With an mmap-backed
+            graph (:func:`repro.core.graph.from_edges_mmap`) peak host
+            RAM is one shard's staging buffer, so a dyad stream larger
+            than memory completes — ``stats["partition"]`` reports the
+            measured ``max_stage_bytes`` against the full
+            ``stream_bytes``.  Only meaningful with ``partitions > 1``.
     """
 
     backend: str = "auto"
@@ -160,6 +184,8 @@ class EngineConfig:
     schedule_fallback: bool = True
     reorder: str = "none"
     fault_plan: Optional[FaultPlan] = None
+    partitions: Optional[int] = None
+    spill: "Optional[bool | str]" = None
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -230,6 +256,29 @@ class EngineConfig:
             raise ValueError(
                 f"fault_plan must be a FaultPlan or None, got "
                 f"{type(self.fault_plan).__name__}")
+        if self.partitions is not None and (
+                not isinstance(self.partitions, int)
+                or isinstance(self.partitions, bool)
+                or self.partitions < 1):
+            raise ValueError(
+                f"partitions must be an int >= 1 or None (got "
+                f"{self.partitions!r}); it is the number of contiguous "
+                "vertex-range graph shards — None/1 is the unpartitioned "
+                "single-device CSR")
+        if self.spill is not None and not isinstance(self.spill, (bool, str)):
+            raise ValueError(
+                f"spill must be None, a bool, or a scratch-directory path "
+                f"(got {type(self.spill).__name__}); True stages shard "
+                "dyad lists through memory-mapped temp files, a string "
+                "names the scratch directory")
+        if (self.partitions is not None and self.partitions > 1
+                and self.device_accum is False):
+            raise ValueError(
+                f"partitions={self.partitions} requires the "
+                "device-resident path: the synchronous baseline "
+                "(device_accum=False) has no on-device accumulator to "
+                "merge shard results into in one sync — drop "
+                "device_accum=False or set partitions=1")
 
     @property
     def acc_jnp_dtype(self):
@@ -261,6 +310,15 @@ class EngineConfig:
         n = (self.n_executor_devices if self.n_executor_devices is not None
              else len(jax.devices()))
         return max(1, min(n, len(jax.devices())))
+
+    def resolve_partitions(self) -> int:
+        """Graph shard count; ``None`` means unpartitioned (1)."""
+        return 1 if self.partitions is None else int(self.partitions)
+
+    def resolve_spill(self) -> "Optional[bool | str]":
+        """Spill policy with the inert ``False`` normalized to ``None``
+        (so off-by-default and explicitly-off configs share one plan)."""
+        return None if self.spill is False else self.spill
 
     def resolve_interpret(self) -> bool:
         if self.interpret is not None:

@@ -95,15 +95,19 @@ def affected_fraction(g_old: CSRGraph, g_new: CSRGraph,
     return max(n_old, n_new) / denom
 
 
-def _pad_dyad_list(plan, u: np.ndarray, v: np.ndarray):
+def _pad_dyad_list(plan, u: np.ndarray, v: np.ndarray, pad=None):
     """Affected dyads padded to the plan's device dyad-list shape.
 
     The compiled chunk units were traced with ``(dyad_pad,)`` dyad
     streams; handing them the same shape means the subset pass reuses the
     full pass's executables with zero retraces.  Padding entries are the
-    inert ``(0, 1)`` dyad, never covered by any task span."""
-    du = np.zeros(plan.dyad_pad, dtype=np.int32)
-    dv = np.ones(plan.dyad_pad, dtype=np.int32)
+    inert ``(0, 1)`` dyad, never covered by any task span.  ``pad``
+    overrides the target length — the partitioned engine pads every
+    shard's dyad span to ONE common length so all shards share a single
+    trace of the chunk unit."""
+    pad = plan.dyad_pad if pad is None else int(pad)
+    du = np.zeros(pad, dtype=np.int32)
+    dv = np.ones(pad, dtype=np.int32)
     du[: len(u)] = u
     dv[: len(v)] = v
     return jnp.asarray(du), jnp.asarray(dv)
@@ -130,16 +134,26 @@ def _zeros(plan):
     return z, z
 
 
-def _subset_xla(plan, g: CSRGraph, u: np.ndarray, v: np.ndarray):
-    """xla subset pass -> (hi, lo): once contribution + affected chunks."""
+def _subset_xla(plan, g: CSRGraph, u: np.ndarray, v: np.ndarray, *,
+                arrays=None, init=None, pad=None):
+    """xla subset pass -> (hi, lo): once contribution + affected chunks.
+
+    The keyword overrides are the partitioned engine's hooks
+    (:mod:`repro.engine.partition`): ``arrays`` substitutes a shard-local
+    CSR for the full padded arrays, ``init`` a pre-folded accumulator for
+    the per-run once fold (so the whole-graph once contribution lands
+    exactly once across shards, not once per shard), and ``pad`` a common
+    shard dyad-list length."""
     from .backends import _once_device
 
     if g.n_dyads == 0:  # match the full-run convention: all-zero raw bins
-        return _zeros(plan)
-    arrays = plan.padded_arrays(g)
+        return _zeros(plan) if init is None else init
+    if arrays is None:
+        arrays = plan.padded_arrays(g)
     n = jnp.int32(g.n)
-    du, dv = _pad_dyad_list(plan, u, v)
-    init = _once_device(plan, *_zeros(plan), arrays, n)
+    du, dv = _pad_dyad_list(plan, u, v, pad)
+    if init is None:
+        init = _once_device(plan, *_zeros(plan), arrays, n)
 
     def place(dev):
         ctx = (arrays, n, du, dv)
@@ -154,19 +168,27 @@ def _subset_xla(plan, g: CSRGraph, u: np.ndarray, v: np.ndarray):
                              place=place, step=step, init=init)
 
 
-def _subset_distributed(plan, g: CSRGraph, u: np.ndarray, v: np.ndarray):
+def _subset_distributed(plan, g: CSRGraph, u: np.ndarray, v: np.ndarray, *,
+                        arrays=None, init=None, slab_l=None):
     """distributed subset pass: affected dyads dealt round-robin into the
-    ``(n_devices, L)`` slab layout the shard_map unit was traced for."""
+    ``(n_devices, L)`` slab layout the shard_map unit was traced for.
+
+    ``arrays``/``init`` as in :func:`_subset_xla`; ``slab_l`` pins the
+    per-device slab length so every shard of a partitioned run shares one
+    trace (excess slab slots carry the validity-masked inert dyad)."""
     from .backends import _once_device, chunk_l
 
     if g.n_dyads == 0:
-        return _zeros(plan)
+        return _zeros(plan) if init is None else init
     n_dev = math.prod(plan.mesh.devices.shape)
     cl = chunk_l(plan)
     D = len(u)
-    # per-device slab length: ceil(D / n_dev), rounded up to whole chunks
-    per = -(-max(D, 1) // n_dev)
-    L = max(cl, -(-per // cl) * cl)
+    if slab_l is None:
+        # per-device slab: ceil(D / n_dev), rounded up to whole chunks
+        per = -(-max(D, 1) // n_dev)
+        L = max(cl, -(-per // cl) * cl)
+    else:
+        L = int(slab_l)
     tu = np.zeros((n_dev, L), dtype=np.int32)
     tv = np.ones((n_dev, L), dtype=np.int32)
     tval = np.zeros((n_dev, L), dtype=bool)
@@ -174,10 +196,12 @@ def _subset_distributed(plan, g: CSRGraph, u: np.ndarray, v: np.ndarray):
     tu[r % n_dev, r // n_dev] = u
     tv[r % n_dev, r // n_dev] = v
     tval[r % n_dev, r // n_dev] = True
-    arrays = plan.padded_arrays(g)
+    if arrays is None:
+        arrays = plan.padded_arrays(g)
     n = jnp.int32(g.n)
     dtu, dtv, dtval = jnp.asarray(tu), jnp.asarray(tv), jnp.asarray(tval)
-    init = _once_device(plan, *_zeros(plan), arrays, n)
+    if init is None:
+        init = _once_device(plan, *_zeros(plan), arrays, n)
 
     def place(dev):
         return (arrays, n, dtu, dtv, dtval)
@@ -194,14 +218,21 @@ def _subset_distributed(plan, g: CSRGraph, u: np.ndarray, v: np.ndarray):
     return plan.executor.run(tasks, place=place, step=step, init=init)
 
 
-def _subset_pallas(plan, g: CSRGraph, u: np.ndarray, v: np.ndarray):
+def _subset_pallas(plan, g: CSRGraph, u: np.ndarray, v: np.ndarray, *,
+                   arrays=None, init=None, pad=None):
     """pallas subset pass: host-side (bucket, need) sort of the affected
     dyads mirrors the full pass's device sort, so every task dispatches an
-    already-compiled ``K`` specialization of the tile kernel."""
+    already-compiled ``K`` specialization of the tile kernel.
+
+    ``arrays``/``init``/``pad`` as in :func:`_subset_xla`; an ``arrays``
+    override must already carry the transpose CSR when the plan runs the
+    census tile kernel (the partitioned engine builds it per shard —
+    shard-local in-rows are complete because every in-arc source of a
+    kept endpoint is one of its neighbors, hence in the halo)."""
     from .backends import _once_device
 
     if g.n_dyads == 0:
-        return _zeros(plan)
+        return _zeros(plan) if init is None else init
     cfg = plan.config
     interpret = cfg.resolve_interpret()
     block = cfg.resolve_block()
@@ -210,9 +241,11 @@ def _subset_pallas(plan, g: CSRGraph, u: np.ndarray, v: np.ndarray):
     ks = tuple(sorted({min(max(int(k), 1), kmax)
                        for k in cfg.buckets} | {kmax}))
     census_needed = "triad_census" in plan.layout.slices
-    arrays = plan.padded_arrays(g, with_in_csr=census_needed)
+    if arrays is None:
+        arrays = plan.padded_arrays(g, with_in_csr=census_needed)
     n = jnp.int32(g.n)
-    init = _once_device(plan, *_zeros(plan), arrays, n)
+    if init is None:
+        init = _once_device(plan, *_zeros(plan), arrays, n)
     D = len(u)
     if census_needed and D:
         deg = np.asarray(g.arrays.nbr_deg)
@@ -245,7 +278,7 @@ def _subset_pallas(plan, g: CSRGraph, u: np.ndarray, v: np.ndarray):
     else:
         tasks = [t._replace(key=kmax)
                  for t in _subset_tasks(plan, g, u, v, chunk)]
-    stream_u, stream_v = _pad_dyad_list(plan, u, v)
+    stream_u, stream_v = _pad_dyad_list(plan, u, v, pad)
 
     def place(dev):
         ctx = (arrays, n, stream_u, stream_v)
@@ -281,7 +314,14 @@ def delta_correction(plan, g_old: CSRGraph, g_new: CSRGraph,
               else affected_old)
     nu, nv = (affected_dyads(g_new, delta) if affected_new is None
               else affected_new)
-    runner = _SUBSET_RUNNERS[plan.backend]
+    if plan.partitions > 1:
+        # partitioned plans correct through the sharded subset pass: the
+        # affected dyads group by owner shard and ONLY the owning shards'
+        # local CSRs are rebuilt and dispatched — a delta touches the
+        # shards holding its endpoints' ranges, not the whole graph.
+        from .partition import subset_partitioned as runner
+    else:
+        runner = _SUBSET_RUNNERS[plan.backend]
     hi_o, lo_o = runner(plan, g_old, ou, ov)
     hi_n, lo_n = runner(plan, g_new, nu, nv)
     hi, lo = _acc_diff(hi_n, lo_n, hi_o, lo_o)

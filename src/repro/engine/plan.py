@@ -130,6 +130,21 @@ class Plan:
         d_bucket = max(1, meta.m_nbr_bucket // 2)
         self.dyad_pad = max(self.chunk, -(-d_bucket // self.chunk) * self.chunk)
         self.device_path = config.resolve_device_accum()
+        # partitioned-graph subsystem: shard count (1 = unpartitioned) and
+        # the locality precondition — every op's per-dyad contribution must
+        # read only {u, v} ∪ N(u) ∪ N(v) (the delta_local contract), which
+        # is exactly what each shard's halo keeps locally.
+        self.partitions = config.resolve_partitions()
+        if self.partitions > 1:
+            nonlocal_ops = [op.name for op in self.ops
+                            if not getattr(op, "delta_local", True)]
+            if nonlocal_ops:
+                raise ValueError(
+                    f"partitions={self.partitions} requires every op to "
+                    f"honor the delta_local locality contract, but "
+                    f"{nonlocal_ops} opt out — their kernels may read "
+                    "rows outside a shard's halo; run them unpartitioned "
+                    "(partitions=1)")
         self.stats = {"traces": 0, "runs": 0, "chunks": 0, "host_syncs": 0,
                       "batch_runs": 0, "batch_graphs": 0, "device_chunks": {},
                       "delta_runs": 0, "delta_fulls": 0, "reorders": 0,
@@ -161,6 +176,10 @@ class Plan:
         # graphs (config.reorder != "none"): warm runs pay zero reorder
         # cost.  Same lifetime/bound discipline as _task_memo.
         self._reorder_memo: dict = {}
+        # bounded per-graph memo of partition layouts (metadata only —
+        # cuts, halo ids, shard sizes; local CSRs rebuild per run).  Same
+        # lifetime/bound discipline as the memos above.
+        self._partition_memo: dict = {}
         # distributed: per-shard load summary of the most recent run
         # (a backends.TaskStats — plans are cached with a bounded LRU, so
         # only the (n_shards,) weights are retained, never the task arrays).
@@ -390,14 +409,26 @@ class Plan:
         here: a pallas run that fails (after the executor's own bounded
         retries) demotes the plan and re-runs on xla — bit-identical
         bins, one extra counted sync for the failed run only, and every
-        later run executes on the demoted rung directly."""
+        later run executes on the demoted rung directly.
+
+        ``partitions > 1`` dispatches the sharded-CSR path instead
+        (:func:`repro.engine.partition.run_partitioned`) — inside the
+        same try, so the ladder composes: a failed pallas shard pass
+        demotes the plan and the whole partitioned run re-enters on
+        xla.  Reordering composes upstream (``_execute_raw`` relabels
+        before dispatch), so partition cuts are computed over the
+        locality-relabeled ids — PR 8's reorder doubles as the
+        partitioner."""
         try:
+            if self.partitions > 1:
+                from .partition import run_partitioned
+                return run_partitioned(self, g)
             return backends.RUNNERS[self.backend](self, g)
         except Exception as e:
             if self.backend != "pallas" or not self.config.backend_fallback:
                 raise
             self._demote("xla", stage="runtime", reason=repr(e))
-            return backends.RUNNERS[self.backend](self, g)
+            return self._run_raw(g)
 
     def run_batch(self, graphs) -> "list[dict]":
         """Execute the fused pass on B same-bucket graphs as one batch.
@@ -431,10 +462,12 @@ class Plan:
         self.stats["runs"] += len(graphs)
         self.stats["batch_runs"] += 1
         self.stats["batch_graphs"] += len(graphs)
-        if self.backend == "xla" and self.device_path:
+        if self.backend == "xla" and self.device_path and self.partitions == 1:
             # reorder each member (memoized) and batch the relabeled
             # graphs — same buckets, so the vmapped unit is unchanged;
-            # raw bins map back per member before finalize.
+            # raw bins map back per member before finalize.  Partitioned
+            # plans take the member-wise branch below: each member runs
+            # the sharded path with its own bounded shard contexts.
             pairs = [self._reordered(g) for g in graphs]
             raws = backends.run_xla_batch(self, [ge for ge, _ in pairs])
             return [self.layout.finalize(
@@ -629,7 +662,9 @@ def compile(graph_meta, ops=("triad_census",),
         config, backend=backend,
         device_accum=config.resolve_device_accum(),
         n_executor_devices=(1 if backend == "distributed"
-                            else config.resolve_executor_devices()))
+                            else config.resolve_executor_devices()),
+        partitions=config.resolve_partitions(),
+        spill=config.resolve_spill())
     if backend == "distributed" and mesh is None:
         mesh = _default_mesh(len(jax.devices()))
     # key on the op *instances* (identity), not their names: re-registering
@@ -679,6 +714,7 @@ def clear_plan_cache() -> None:
     for p in _PLAN_CACHE.values():
         p._task_memo.clear()
         p._reorder_memo.clear()
+        p._partition_memo.clear()
     _PLAN_CACHE.clear()
     _CACHE_STATS.update(hits=0, misses=0, evictions=0)
 
@@ -705,7 +741,12 @@ def plan_cache_stats() -> dict:
     chunk-schedule memo, cleared with the cache by
     :func:`clear_plan_cache`, and the locality policy — ``reorder``
     (the plan's relabeling strategy) with ``reorder_memo``, the live
-    entries in its bounded per-graph permutation memo).  This is the
+    entries in its bounded per-graph permutation memo).  Partitioned
+    plans additionally report ``partitions`` (the configured shard
+    count; 1 = unpartitioned), ``partition_memo`` (live layout-memo
+    entries) and — after a partitioned run — ``partition``, the last
+    run's layout record (cuts, per-shard dyad counts, halo sizes, spill
+    staging footprint; see :mod:`repro.engine.partition`).  This is the
     introspection surface
     :class:`repro.serve.CensusService` reports per-bucket stats from.
     """
@@ -717,10 +758,14 @@ def plan_cache_stats() -> dict:
              schedule=p.config.schedule, n_devices=p.executor.n_devices,
              task_memo=len(p._task_memo), reorder=p.config.reorder,
              reorder_memo=len(p._reorder_memo),
+             partitions=p.partitions,
+             partition_memo=len(p._partition_memo),
              **{**p.stats,
                 "device_chunks": dict(p.stats["device_chunks"]),
                 "faults": dict(p.stats["faults"]),
-                "fault_events": list(p.stats["fault_events"])})
+                "fault_events": list(p.stats["fault_events"]),
+                **({"partition": dict(p.stats["partition"])}
+                   if "partition" in p.stats else {})})
         for p in _PLAN_CACHE.values()
     ]
     return {**_CACHE_STATS, "size": len(_PLAN_CACHE),

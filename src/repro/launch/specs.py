@@ -21,7 +21,7 @@ from ..config import SHAPES, ModelConfig, RunConfig, ShapeConfig, get_config
 from ..models import transformer as tfm
 from ..models.params import abstract_params, param_specs
 from ..serve.decode import make_prefill_step, make_serve_step
-from ..sharding.partition import batch_axes, make_rules
+from ..sharding.rules import batch_axes, make_rules
 from ..train.optimizer import OptState
 from ..train.train_step import make_train_step
 

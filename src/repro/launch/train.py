@@ -23,7 +23,7 @@ from ..config import RunConfig, get_config
 from ..data import SyntheticTokens
 from ..models import transformer as tfm
 from ..models.params import param_specs
-from ..sharding.partition import batch_axes, make_rules
+from ..sharding.rules import batch_axes, make_rules
 from ..train import CheckpointManager, adamw_init, make_train_step
 from ..train.elastic import StepWatchdog, plan_elastic_mesh
 from ..train.optimizer import OptState

@@ -9,7 +9,7 @@ positions are computed with a sort over (token, expert) pairs — the same
 sorted-packing idea as ``core.balance.sorted_snake`` — instead of the
 O(tokens x experts) cumsum one-hot, which would not fit at 1M tokens.
 
-Sharding modes (see sharding.partition.make_rules):
+Sharding modes (see sharding.rules.make_rules):
   * ``expert``: experts on the model axis (deepseek-v2: 160 % 16 == 0).
   * ``tensor``: experts replicated, each expert's ffn tensor-parallel
     (granite-moe: 40 experts do not divide the 16-way axis).

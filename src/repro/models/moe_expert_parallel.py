@@ -18,7 +18,7 @@ all-reduce, no replicated capacity buffer.  Kept separate from
 ``moe_apply`` (the jit/GSPMD path used by the dry-run records) so the
 recorded baselines stay reproducible.
 
-Layout contract (matches sharding.partition 'expert' mode):
+Layout contract (matches sharding.rules 'expert' mode):
   * x:        (B, T, d)  sharded P(batch_axes, None, None)
   * router:   (d, E)     replicated
   * w_gate/up:(E, d, f)  sharded P('model', None, None)
@@ -35,7 +35,7 @@ from jax.sharding import PartitionSpec as P
 
 from .. import compat
 from ..config.base import ModelConfig
-from ..sharding.partition import batch_axes
+from ..sharding.rules import batch_axes
 from .moe import _positions_in_expert
 
 

@@ -16,12 +16,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..sharding.partition import Rules
+from ..sharding.rules import Rules
 
 
 class ParamDef(NamedTuple):
     shape: tuple
-    logical: tuple  # logical axis name per dim (see sharding.partition)
+    logical: tuple  # logical axis name per dim (see sharding.rules)
     init: str = "normal"  # normal | zeros | ones | embed
     scale: float | None = None  # stddev override
 

@@ -261,7 +261,7 @@ def make_forward(cfg: ModelConfig, run: RunConfig, mesh=None, rules=None):
     def constrain(x, logical):
         if mesh is None or rules is None:
             return x
-        from ..sharding.partition import constrain as _c
+        from ..sharding.rules import constrain as _c
         return _c(x, mesh, rules, logical)
 
     remat = run.remat != "none"

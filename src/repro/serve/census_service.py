@@ -622,11 +622,14 @@ class CensusService:
                if c - before_dev.get(d, 0)}
         faults = {k: v - before_faults.get(k, 0)
                   for k, v in plan.stats["faults"].items()}
+        part = plan.stats.get("partition")
         return dict(results=results, errors=errors, batch_failed=batch_failed,
                     faults=faults,
                     host_syncs=plan.stats["host_syncs"] - before["host_syncs"],
                     chunks=plan.stats["chunks"] - before["chunks"],
-                    device_chunks=dev)
+                    device_chunks=dev,
+                    partitions=plan.partitions,
+                    partition=dict(part) if part else None)
 
     def _record_outcome(self, key, group, out) -> None:
         """Fold one executed (or dead) group into service state — always
@@ -655,6 +658,12 @@ class CensusService:
         st["chunks"] += out["chunks"]
         for d, c in out["device_chunks"].items():
             self._device_chunks[d] = self._device_chunks.get(d, 0) + c
+        if out.get("partition"):
+            # last partitioned layout this bucket executed (cuts, halo
+            # sizes, per-shard dyads, spill footprint) — see
+            # repro.engine.partition.run_partitioned.
+            st["partitions"] = out["partitions"]
+            st["partition"] = out["partition"]
         self._health["batch_failures"] += out["batch_failed"]
         self._health["poisoned"] += sum(1 for e in errors if e is not None)
         for k in ("retries", "quarantines", "backend_fallbacks",
@@ -673,7 +682,11 @@ class CensusService:
         counts, ``occupancy`` (batched graphs per flushed batch slot —
         1.0 means every batch left full), the host syncs / chunks its
         batches cost, and ``by_ops`` (requests per ops tuple — the
-        mixed-analytic split).  ``mean_batch`` is the fleet-wide average
+        mixed-analytic split); buckets serving a partitioned plan
+        (``CensusConfig(partitions > 1)``) additionally report
+        ``partitions`` and ``partition`` — the last executed shard
+        layout: cuts, per-shard dyad counts, halo sizes, and the spill
+        staging footprint (see :mod:`repro.engine.partition`).  ``mean_batch`` is the fleet-wide average
         batch width — the dispatch amortization factor actually achieved.
         ``devices`` maps executor pool device index → chunks the service
         dispatched there across all batches (all on device 0 under the

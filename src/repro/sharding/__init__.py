@@ -1,5 +1,5 @@
-from .partition import (Rules, batch_axes, logical_to_spec, make_rules,
-                        named_sharding)
+from .rules import (Rules, batch_axes, logical_to_spec, make_rules,
+                    named_sharding)
 
 __all__ = ["Rules", "batch_axes", "logical_to_spec", "make_rules",
            "named_sharding"]

@@ -44,8 +44,8 @@ import numpy as np
 from .graph import CSRGraph, GraphArrays
 
 __all__ = ["GraphPartition", "ShardInfo", "build_local_arrays",
-           "halo_vertices", "partition_cuts", "partition_graph",
-           "shard_dyads"]
+           "halo_by_owner", "halo_vertices", "local_ptrs", "owned_idx",
+           "partition_cuts", "partition_graph", "shard_dyads"]
 
 
 def _host(a) -> np.ndarray:
@@ -127,6 +127,70 @@ def halo_vertices(g: CSRGraph, lo: int, hi: int,
     third = _gather_rows(ptr, _host(g.arrays.nbr_idx), ends)
     needed = np.union1d(ends, third)
     return needed[(needed < lo) | (needed >= hi)]
+
+
+def halo_by_owner(cuts: np.ndarray, halo: np.ndarray) -> "list[tuple[int, np.ndarray]]":
+    """Group a shard's halo row ids by their OWNER shard — the ownership
+    metadata the device-side halo exchange routes on.
+
+    Contiguous vertex-range ownership makes this a ``searchsorted`` over
+    the cuts: halo id ``w`` is owned by the shard whose range contains it,
+    and because ``halo`` is sorted, each owner's ids form one contiguous
+    slice.  Returns ``[(owner_index, ids), ...]`` for owners with at
+    least one requested row, in owner order — each entry is one
+    (requester, owner) exchange: the owner's resident device arrays hold
+    the rows in full, so the rows transfer device-to-device
+    (``jax.device_put`` peer copy), never through the host."""
+    halo = np.asarray(halo, dtype=np.int64)
+    if len(halo) == 0:
+        return []
+    owner = np.searchsorted(np.asarray(cuts), halo, side="right") - 1
+    bounds = np.flatnonzero(np.diff(owner)) + 1
+    groups = np.split(halo, bounds)
+    return [(int(owner[0 if i == 0 else bounds[i - 1]]), grp)
+            for i, grp in enumerate(groups)]
+
+
+def local_ptrs(g: CSRGraph, lo: int, hi: int, halo: np.ndarray):
+    """The O(n) ptr half of a shard's local CSR — ``(out_ptr, nbr_ptr,
+    nbr_deg)`` exactly as :func:`build_local_arrays` lays them out, but
+    WITHOUT gathering any idx entries.
+
+    The device-side halo exchange stages these host-derived ptr arrays
+    (cheap, vertex-count-sized) and fills the idx arrays on device: the
+    owned block from one host upload, every halo block from the owner
+    shard's resident device rows.  The idx layout they describe is the
+    concatenation of kept rows in vertex-id order, so the block of rows
+    owned by shard ``o`` (range ``[lo_o, hi_o)``) occupies the contiguous
+    span ``[ptr[lo_o], ptr[hi_o])`` of the compacted idx array —
+    block offsets come straight off these ptrs."""
+    keep = np.union1d(np.arange(lo, hi, dtype=np.int64),
+                      np.asarray(halo, dtype=np.int64))
+
+    def sub(ptr_full):
+        ptr = _host(ptr_full)[: g.n + 1].astype(np.int64)
+        counts = ptr[keep + 1] - ptr[keep]
+        new_counts = np.zeros(g.n, dtype=np.int64)
+        new_counts[keep] = counts
+        return np.concatenate([[0], np.cumsum(new_counts)]).astype(np.int32)
+
+    out_ptr = sub(g.arrays.out_ptr)
+    nbr_ptr = sub(g.arrays.nbr_ptr)
+    nbr_deg = (nbr_ptr[1:] - nbr_ptr[:-1]).astype(np.int32)
+    return out_ptr, nbr_ptr, nbr_deg
+
+
+def owned_idx(g: CSRGraph, lo: int, hi: int):
+    """Concatenated idx entries of the OWNED rows ``[lo, hi)`` only —
+    ``(out_block, nbr_block)`` int32 — the single host→device upload a
+    pool-mode shard pays (1/P of the graph; halo blocks arrive
+    device-to-device from their owners)."""
+    verts = np.arange(lo, hi, dtype=np.int64)
+    out = _gather_rows(_host(g.arrays.out_ptr)[: g.n + 1].astype(np.int64),
+                       _host(g.arrays.out_idx), verts).astype(np.int32)
+    nbr = _gather_rows(_host(g.arrays.nbr_ptr)[: g.n + 1].astype(np.int64),
+                       _host(g.arrays.nbr_idx), verts).astype(np.int32)
+    return out, nbr
 
 
 def build_local_arrays(g: CSRGraph, lo: int, hi: int,

@@ -24,6 +24,7 @@ from .faults import FaultPlan
 BACKENDS = ("xla", "pallas", "distributed", "auto")
 SCHEDULES = ("static", "dynamic")
 REORDERS = ("none", "degree", "bfs", "rcm")
+PARTITION_MODES = ("serial", "pool", "mesh")
 
 _ACC_DTYPES = {"int32": jnp.int32, "int64": jnp.int64, "float32": jnp.float32}
 
@@ -162,6 +163,29 @@ class EngineConfig:
             than memory completes — ``stats["partition"]`` reports the
             measured ``max_stage_bytes`` against the full
             ``stream_bytes``.  Only meaningful with ``partitions > 1``.
+        partition_mode: shard residency policy for ``partitions > 1``
+            (``None`` resolves per backend; rejected when
+            ``partitions`` is ``None``/``1``).  ``"pool"`` — the
+            xla/pallas default — places every shard's local CSR and
+            hi/lo accumulator on a distinct executor-pool device
+            SIMULTANEOUSLY (resident for the whole run, one counted
+            host→device staging per shard), fills halos with a
+            device-side exchange (owner shards serve their rows via
+            ``jax.device_put`` peer transfers), and drives all shards
+            through the executor workqueue at once — aggregate pool
+            memory, not the largest single device, bounds graph size,
+            and shards overlap in wall time
+            (``stats["partition"]["shard_overlap"]``).  ``"serial"``
+            runs one shard context at a time pinned to the primary
+            device — the out-of-core mode, and the default whenever
+            ``spill`` is set; peak device memory is ONE shard.  ``"mesh"`` — the
+            distributed-backend default — stacks shard contexts along
+            the mesh axis and runs waves of ``shard_map``, one shard
+            per mesh device per wave.  ``"mesh"`` requires the
+            distributed backend and ``"pool"`` everything but (the
+            mesh already owns every device).  All three modes are
+            bit-identical to ``partitions=1`` and cost ONE device→host
+            sync.  Part of the cache key (normalized at compile).
     """
 
     backend: str = "auto"
@@ -186,6 +210,7 @@ class EngineConfig:
     fault_plan: Optional[FaultPlan] = None
     partitions: Optional[int] = None
     spill: "Optional[bool | str]" = None
+    partition_mode: Optional[str] = None
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -271,6 +296,21 @@ class EngineConfig:
                 f"(got {type(self.spill).__name__}); True stages shard "
                 "dyad lists through memory-mapped temp files, a string "
                 "names the scratch directory")
+        if self.partition_mode is not None:
+            if self.partition_mode not in PARTITION_MODES:
+                raise ValueError(
+                    f"partition_mode must be one of {PARTITION_MODES} or "
+                    f"None, got {self.partition_mode!r}; 'pool' makes every "
+                    "shard resident on a distinct executor-pool device "
+                    "simultaneously (device-side halo exchange), 'serial' "
+                    "runs one shard context at a time on the primary device "
+                    "(the out-of-core mode), 'mesh' runs shard waves via "
+                    "shard_map on the distributed backend's mesh")
+            if self.partitions is None or self.partitions == 1:
+                raise ValueError(
+                    f"partition_mode={self.partition_mode!r} requires "
+                    "partitions > 1 — an unpartitioned run has no shards "
+                    "to place; set partitions or drop partition_mode")
         if (self.partitions is not None and self.partitions > 1
                 and self.device_accum is False):
             raise ValueError(
@@ -314,6 +354,24 @@ class EngineConfig:
     def resolve_partitions(self) -> int:
         """Graph shard count; ``None`` means unpartitioned (1)."""
         return 1 if self.partitions is None else int(self.partitions)
+
+    def resolve_partition_mode(self, backend: "Optional[str]" = None) -> "Optional[str]":
+        """Shard residency mode for the resolved backend: ``None`` for
+        unpartitioned plans, the explicit mode when set, ``"serial"``
+        when ``spill`` is active (out-of-core staging promises ONE
+        resident shard — concurrent residency would break the bounded
+        staging peak), else ``"mesh"`` on the distributed backend (whose
+        mesh owns every device) and ``"pool"`` everywhere else.
+        ``compile()`` normalizes the config through this, so ``None``
+        and the mode it resolves to share one plan-cache entry."""
+        if self.resolve_partitions() == 1:
+            return None
+        if self.partition_mode is not None:
+            return self.partition_mode
+        if self.resolve_spill():
+            return "serial"
+        backend = backend if backend is not None else self.resolve_backend()
+        return "mesh" if backend == "distributed" else "pool"
 
     def resolve_spill(self) -> "Optional[bool | str]":
         """Spill policy with the inert ``False`` normalized to ``None``

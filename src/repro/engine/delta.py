@@ -218,21 +218,17 @@ def _subset_distributed(plan, g: CSRGraph, u: np.ndarray, v: np.ndarray, *,
     return plan.executor.run(tasks, place=place, step=step, init=init)
 
 
-def _subset_pallas(plan, g: CSRGraph, u: np.ndarray, v: np.ndarray, *,
-                   arrays=None, init=None, pad=None):
-    """pallas subset pass: host-side (bucket, need) sort of the affected
-    dyads mirrors the full pass's device sort, so every task dispatches an
-    already-compiled ``K`` specialization of the tile kernel.
+def _pallas_subset_schedule(plan, g: CSRGraph, u: np.ndarray, v: np.ndarray):
+    """Host-side (bucket, need) schedule for a pallas pass over the dyad
+    sublist ``(u, v)`` — the subset mirror of the full pass's device sort,
+    shared by the subset runner below and the partitioned drivers
+    (:mod:`repro.engine.partition`), which must upload the device dyad
+    list in the SAME order the task spans index into.
 
-    ``arrays``/``init``/``pad`` as in :func:`_subset_xla`; an ``arrays``
-    override must already carry the transpose CSR when the plan runs the
-    census tile kernel (the partitioned engine builds it per shard —
-    shard-local in-rows are complete because every in-arc source of a
-    kept endpoint is one of its neighbors, hence in the halo)."""
-    from .backends import _once_device
-
-    if g.n_dyads == 0:
-        return _zeros(plan) if init is None else init
+    Returns ``(u, v, tasks, chunk, block, interpret)`` with ``u``/``v``
+    REORDERED into bucket-sorted order: every :class:`ChunkTask` carries
+    the ``K`` specialization its span compiles against, so each dispatch
+    hits an already-compiled tile kernel."""
     cfg = plan.config
     interpret = cfg.resolve_interpret()
     block = cfg.resolve_block()
@@ -241,11 +237,6 @@ def _subset_pallas(plan, g: CSRGraph, u: np.ndarray, v: np.ndarray, *,
     ks = tuple(sorted({min(max(int(k), 1), kmax)
                        for k in cfg.buckets} | {kmax}))
     census_needed = "triad_census" in plan.layout.slices
-    if arrays is None:
-        arrays = plan.padded_arrays(g, with_in_csr=census_needed)
-    n = jnp.int32(g.n)
-    if init is None:
-        init = _once_device(plan, *_zeros(plan), arrays, n)
     D = len(u)
     if census_needed and D:
         deg = np.asarray(g.arrays.nbr_deg)
@@ -278,6 +269,32 @@ def _subset_pallas(plan, g: CSRGraph, u: np.ndarray, v: np.ndarray, *,
     else:
         tasks = [t._replace(key=kmax)
                  for t in _subset_tasks(plan, g, u, v, chunk)]
+    return u, v, tasks, chunk, block, interpret
+
+
+def _subset_pallas(plan, g: CSRGraph, u: np.ndarray, v: np.ndarray, *,
+                   arrays=None, init=None, pad=None):
+    """pallas subset pass: host-side (bucket, need) sort of the affected
+    dyads mirrors the full pass's device sort, so every task dispatches an
+    already-compiled ``K`` specialization of the tile kernel.
+
+    ``arrays``/``init``/``pad`` as in :func:`_subset_xla`; an ``arrays``
+    override must already carry the transpose CSR when the plan runs the
+    census tile kernel (the partitioned engine builds it per shard —
+    shard-local in-rows are complete because every in-arc source of a
+    kept endpoint is one of its neighbors, hence in the halo)."""
+    from .backends import _once_device
+
+    if g.n_dyads == 0:
+        return _zeros(plan) if init is None else init
+    census_needed = "triad_census" in plan.layout.slices
+    if arrays is None:
+        arrays = plan.padded_arrays(g, with_in_csr=census_needed)
+    n = jnp.int32(g.n)
+    if init is None:
+        init = _once_device(plan, *_zeros(plan), arrays, n)
+    u, v, tasks, chunk, block, interpret = _pallas_subset_schedule(
+        plan, g, u, v)
     stream_u, stream_v = _pad_dyad_list(plan, u, v, pad)
 
     def place(dev):

@@ -60,6 +60,7 @@ from __future__ import annotations
 
 import collections
 import threading
+import time
 from typing import NamedTuple, Optional
 
 import jax
@@ -465,5 +466,297 @@ class Executor:
             if acc is None:
                 continue
             hi_d, lo_d = jax.device_put(acc, primary)
+            hi, lo = _merge_accs(hi, lo, hi_d, lo_d)
+        return hi, lo
+
+    # -- pinned: in-order dispatch of a pre-placed shard context -------------
+
+    def _run_pinned_once(self, tasks, ctx, step, init):
+        hi, lo = init
+        window: collections.deque = collections.deque()
+        for ordinal, t in enumerate(tasks):
+            hi, lo = self._attempt(ctx, hi, lo, t, step, 0, ordinal)
+            self.stats["chunks"] += 1
+            self._bump(0, 1)
+            _throttle(window, hi, self.depth)
+        return hi, lo
+
+    def run_pinned(self, tasks, *, ctx, step, init, rebuild=None):
+        """In-order dispatch on the PRIMARY device with a pre-placed
+        context — the partitioned engine's ``partition_mode="serial"``
+        rung: the caller stages ``ctx`` exactly once per shard (the
+        hoisted ``device_put`` — no per-worker re-staging) and one shard
+        context is resident at a time.  Bounded per-chunk retry as on the
+        static path; a lost primary device under ``schedule_fallback``
+        re-runs this shard's tasks with device-loss injection suppressed
+        (fresh-device semantics), re-staging the context via ``rebuild()``
+        when provided.  The accumulator restarts from ``init`` on that
+        rung — failed attempts never touched it, so recovered results
+        stay bit-identical."""
+        try:
+            return self._run_pinned_once(tasks, ctx, step, init)
+        except ChunkRetryError as e:
+            if not (self.schedule_fallback
+                    and isinstance(e.__cause__, DeviceLostError)):
+                raise
+            self._note("schedule_fallback", "pinned-rerun",
+                       schedule_fallbacks=1)
+            self._suppress_device_loss = True
+            try:
+                return self._run_pinned_once(
+                    tasks, ctx if rebuild is None else rebuild(), step, init)
+            finally:
+                self._suppress_device_loss = False
+
+    # -- sharded: concurrent multi-shard workqueue over the pool -------------
+
+    def run_sharded(self, shard_tasks, *, place, step, init, pstats):
+        """Concurrent shard residency: drive EVERY shard's tasks through
+        the pool at once (``partition_mode="pool"``).
+
+        ``shard_tasks`` is ``[(shard_id, [ChunkTask, ...]), ...]``; each
+        shard is HOMED on one pool device (round-robin) and
+        ``place(shard_id, device)`` returns its device-resident context —
+        called exactly once per shard per run (the caller counts these as
+        ``stats["partition"]["h2d_puts"]``), so shard arrays stay
+        resident for the whole run instead of re-staging per worker or
+        per chunk.  Each (device, shard) pair accumulates into its own
+        hi/lo lane; lanes merge on the primary device via
+        :func:`_merge_accs` — exact integer folds, so the merged totals
+        are bit-identical to the serial path for ANY homing, interleave,
+        or re-home history.  Fault policy extends the workqueue's: a
+        failed chunk retries on its home, a lost/quarantined device
+        **re-homes its shards onto survivors** (their queued tasks move,
+        ``place`` re-stages the context on the new home, the dead
+        device's already-folded lanes stay valid and merge normally, and
+        ``pstats["rehomes"]`` counts the moves), and an exhausted pool
+        under ``schedule_fallback`` re-runs everything in-order on the
+        primary device from ``init``.  Per-shard wall-clock intervals
+        land in ``pstats["shard_times"]`` — the raw material for the
+        ``shard_overlap`` concurrency observable."""
+        shard_tasks = [(s, list(ts)) for s, ts in shard_tasks]
+        try:
+            return self._run_sharded_queue(shard_tasks, place, step, init,
+                                           pstats)
+        except PoolExhaustedError:
+            if not self.schedule_fallback:
+                raise
+            self._note("schedule_fallback", "dynamic->static",
+                       schedule_fallbacks=1)
+            self._suppress_device_loss = True
+            try:
+                hi, lo = init
+                for s, ts in shard_tasks:
+                    ctx = place(s, self.devices[0])
+                    hi, lo = self._run_pinned_once(ts, ctx, step, (hi, lo))
+                return hi, lo
+            finally:
+                self._suppress_device_loss = False
+
+    def _run_sharded_queue(self, shard_tasks, place, step, init, pstats):
+        t_base = time.perf_counter()
+        times = pstats.setdefault("shard_times", {})
+        if len(self.devices) == 1:
+            # degenerate pool (static schedule or one visible device):
+            # shards run in-order on the primary device — still exactly
+            # one staging per shard, still exact accumulator chaining.
+            hi, lo = init
+            for s, ts in shard_tasks:
+                ctx = place(s, self.devices[0])
+                start = time.perf_counter() - t_base
+                hi, lo = self.run_pinned(
+                    ts, ctx=ctx, step=step, init=(hi, lo),
+                    rebuild=lambda s=s: place(s, self.devices[0]))
+                times[s] = dict(start=start,
+                                end=time.perf_counter() - t_base,
+                                tasks=len(ts), device=0)
+            return hi, lo
+        n = len(self.devices)
+        home: dict = {}
+        queues = [collections.deque() for _ in range(n)]
+        by_dev: list = [[] for _ in range(n)]
+        for k, (s, ts) in enumerate(shard_tasks):
+            home[s] = k % n
+            by_dev[k % n].append((s, ts))
+        for i, lst in enumerate(by_dev):
+            # interleave this device's shards round-robin so same-device
+            # shards advance together (P > pool width still overlaps).
+            iters = [iter(ts) for _, ts in lst]
+            names = [s for s, _ in lst]
+            while iters:
+                keep_i, keep_n = [], []
+                for s, it in zip(names, iters):
+                    t = next(it, None)
+                    if t is not None:
+                        queues[i].append((s, t, 1))
+                        keep_i.append(it)
+                        keep_n.append(s)
+                iters, names = keep_i, keep_n
+        cond = threading.Condition()
+        lanes: dict = {}   # (dev_index, shard) -> device (hi, lo) lane
+        ctxs: dict = {}    # shard -> context on its CURRENT home device
+        counts = [0] * n
+        fatal: list = []
+        alive = set(range(n))
+        failures = [0] * n
+        first: dict = {}
+        last: dict = {}
+        task_total = sum(len(ts) for _, ts in shard_tasks)
+        # tasks not yet folded or failed: workers with an empty queue WAIT
+        # on this (a re-home may hand them work later) instead of exiting
+        # — an early exit would strand re-homed tasks and undercount.
+        pending = [task_total]
+
+        def rehome(i: int) -> None:
+            # callers hold cond: device i is out — move its remaining
+            # queue onto survivors and re-point its shards' homes; the
+            # new home's worker re-places each context on first touch.
+            moved = queues[i]
+            queues[i] = collections.deque()
+            if not alive:
+                if moved and not fatal:
+                    fatal.append(PoolExhaustedError(
+                        f"all {n} pool devices lost or quarantined with "
+                        f"{len(moved)} task(s) remaining"))
+                cond.notify_all()
+                return
+            survivors = sorted(alive)
+            assigned: dict = {}
+            for s, t, a in moved:
+                j = assigned.get(s)
+                if j is None:
+                    j = survivors[len(assigned) % len(survivors)]
+                    assigned[s] = j
+                    home[s] = j
+                    ctxs.pop(s, None)
+                    pstats["rehomes"] = pstats.get("rehomes", 0) + 1
+                    self._note("shard_rehome", s, i, j)
+                queues[j].append((s, t, a))
+            cond.notify_all()
+
+        def quarantine(i: int, reason: str) -> None:
+            # callers hold cond
+            alive.discard(i)
+            self._note("quarantine", i, reason, quarantines=1)
+            rehome(i)
+
+        def on_failure(i: int, s, t, attempt: int, e: Exception) -> None:
+            # callers hold cond
+            if isinstance(e, DeviceLostError):
+                queues[i].appendleft((s, t, attempt))  # chunk not at fault
+                quarantine(i, "device_loss")
+                return
+            failures[i] += 1
+            if attempt >= self.max_attempts:
+                err = ChunkRetryError(
+                    f"chunk [{t.start}, {t.end}) of shard {s} failed "
+                    f"after {attempt} attempt(s)")
+                err.__cause__ = e
+                fatal.append(err)
+                cond.notify_all()
+                return
+            self._note("retry", t.start, attempt, retries=1)
+            queues[i].append((s, t, attempt + 1))
+            if failures[i] >= self.QUARANTINE_AFTER and len(alive) > 1:
+                quarantine(i, "repeated_failures")
+            cond.notify_all()
+
+        def worker(i: int, dev) -> None:
+            window: collections.deque = collections.deque()
+            ordinal = 0
+            mine: set = set()
+            try:
+                while True:
+                    with cond:
+                        # an empty queue is not the end: wait while other
+                        # devices still hold pending tasks — a loss there
+                        # re-homes work onto this queue.
+                        while (not fatal and i in alive and not queues[i]
+                               and pending[0] > 0):
+                            cond.wait(0.05)
+                        if fatal or i not in alive or not queues[i]:
+                            break
+                        s, t, attempt = queues[i].popleft()
+                        ctx = ctxs.get(s)
+                        first.setdefault(s, time.perf_counter() - t_base)
+                    if ctx is None:
+                        try:
+                            ctx = place(s, dev)
+                        except Exception:
+                            with cond:
+                                queues[i].appendleft((s, t, attempt))
+                                quarantine(i, "placement_failure")
+                            break
+                        with cond:
+                            ctxs[s] = ctx
+                    with cond:
+                        lane = lanes.get((i, s))
+                    if lane is None:
+                        lane = jax.device_put((jnp.zeros_like(init[0]),
+                                               jnp.zeros_like(init[1])), dev)
+                    try:
+                        hi, lo = self._dispatch(ctx, *lane, t, step, i,
+                                                ordinal, attempt)
+                    except Exception as e:
+                        ordinal += 1
+                        with cond:
+                            on_failure(i, s, t, attempt, e)
+                        continue
+                    ordinal += 1
+                    mine.add(s)
+                    counts[i] += 1
+                    with cond:
+                        lanes[(i, s)] = (hi, lo)
+                        pending[0] -= 1
+                        if pending[0] <= 0:
+                            cond.notify_all()
+                    _throttle(window, hi, self.depth)
+            except BaseException as e:  # noqa: BLE001 — see _run_workqueue
+                with cond:
+                    fatal.append(e)
+                    cond.notify_all()
+            finally:
+                # block on this worker's lanes so the recorded end times
+                # reflect COMPLETED device work, not just dispatch.
+                for s in mine:
+                    with cond:
+                        lane = lanes.get((i, s))
+                    if lane is not None:
+                        try:
+                            lane[0].block_until_ready()
+                        except Exception:  # timing only — never fatal
+                            pass
+                    with cond:
+                        last[s] = max(last.get(s, 0.0),
+                                      time.perf_counter() - t_base)
+
+        threads = [threading.Thread(target=worker, args=(i, d), daemon=True)
+                   for i, d in enumerate(self.devices)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if fatal:
+            pool_dead = [e for e in fatal
+                         if isinstance(e, PoolExhaustedError)]
+            if pool_dead:
+                raise pool_dead[0]
+            _raise_worker_errors(fatal)
+        self.stats["chunks"] += task_total
+        for i, c in enumerate(counts):
+            if c:
+                self._bump(i, c)
+        for s, ts in shard_tasks:
+            if s in first:
+                times[s] = dict(start=first[s],
+                                end=max(last.get(s, first[s]), first[s]),
+                                tasks=len(ts), device=home[s])
+        # merge every (device, shard) lane on the primary device: exact
+        # integer folds — bit-identical for any homing or re-home history
+        # (a quarantined device's lanes hold only successful folds).
+        hi, lo = init
+        primary = self.devices[0]
+        for key in sorted(lanes):
+            hi_d, lo_d = jax.device_put(lanes[key], primary)
             hi, lo = _merge_accs(hi, lo, hi_d, lo_d)
         return hi, lo

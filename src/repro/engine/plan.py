@@ -135,6 +135,7 @@ class Plan:
         # read only {u, v} ∪ N(u) ∪ N(v) (the delta_local contract), which
         # is exactly what each shard's halo keeps locally.
         self.partitions = config.resolve_partitions()
+        self.partition_mode = config.resolve_partition_mode(backend)
         if self.partitions > 1:
             nonlocal_ops = [op.name for op in self.ops
                             if not getattr(op, "delta_local", True)]
@@ -145,6 +146,20 @@ class Plan:
                     f"{nonlocal_ops} opt out — their kernels may read "
                     "rows outside a shard's halo; run them unpartitioned "
                     "(partitions=1)")
+            if self.partition_mode == "mesh" and backend != "distributed":
+                raise ValueError(
+                    f"partition_mode='mesh' requires the distributed "
+                    f"backend (got backend={backend!r}): the mesh mode "
+                    "stacks shard contexts along a shard_map mesh axis — "
+                    "use partition_mode='pool' (concurrent pool devices) "
+                    "or 'serial' on this backend")
+            if self.partition_mode == "pool" and backend == "distributed":
+                raise ValueError(
+                    "partition_mode='pool' is not available on the "
+                    "distributed backend: its mesh already owns every "
+                    "device (the executor pool is pinned to one slot) — "
+                    "use partition_mode='mesh' (the default there) or "
+                    "'serial'")
         self.stats = {"traces": 0, "runs": 0, "chunks": 0, "host_syncs": 0,
                       "batch_runs": 0, "batch_graphs": 0, "device_chunks": {},
                       "delta_runs": 0, "delta_fulls": 0, "reorders": 0,
@@ -180,6 +195,9 @@ class Plan:
         # cuts, halo ids, shard sizes; local CSRs rebuild per run).  Same
         # lifetime/bound discipline as the memos above.
         self._partition_memo: dict = {}
+        # lazily-built shard_map unit for partition_mode="mesh" (one per
+        # plan; jit retraces per shard-geometry bucket like every unit).
+        self._mesh_part_fn = None
         # distributed: per-shard load summary of the most recent run
         # (a backends.TaskStats — plans are cached with a bounded LRU, so
         # only the (n_shards,) weights are retained, never the task arrays).
@@ -664,7 +682,8 @@ def compile(graph_meta, ops=("triad_census",),
         n_executor_devices=(1 if backend == "distributed"
                             else config.resolve_executor_devices()),
         partitions=config.resolve_partitions(),
-        spill=config.resolve_spill())
+        spill=config.resolve_spill(),
+        partition_mode=config.resolve_partition_mode(backend))
     if backend == "distributed" and mesh is None:
         mesh = _default_mesh(len(jax.devices()))
     # key on the op *instances* (identity), not their names: re-registering
@@ -743,11 +762,17 @@ def plan_cache_stats() -> dict:
     (the plan's relabeling strategy) with ``reorder_memo``, the live
     entries in its bounded per-graph permutation memo).  Partitioned
     plans additionally report ``partitions`` (the configured shard
-    count; 1 = unpartitioned), ``partition_memo`` (live layout-memo
+    count; 1 = unpartitioned), ``partition_mode`` (the resolved shard
+    residency policy — ``"pool"`` / ``"serial"`` / ``"mesh"``, ``None``
+    unpartitioned), ``partition_memo`` (live layout-memo
     entries) and — after a partitioned run — ``partition``, the last
     run's layout record (cuts, per-shard dyad counts, halo sizes, spill
-    staging footprint; see :mod:`repro.engine.partition`).  This is the
-    introspection surface
+    staging footprint, plus the residency observables: ``h2d_puts``
+    (counted host→device shard stagings), ``d2d_puts`` (device-side halo
+    peer transfers), ``shard_overlap`` (fraction of busy wall time with
+    two or more shards in flight) and ``shard_times`` (per-shard
+    start/end/tasks/device records); see
+    :mod:`repro.engine.partition`).  This is the introspection surface
     :class:`repro.serve.CensusService` reports per-bucket stats from.
     """
     entries = [
@@ -759,6 +784,7 @@ def plan_cache_stats() -> dict:
              task_memo=len(p._task_memo), reorder=p.config.reorder,
              reorder_memo=len(p._reorder_memo),
              partitions=p.partitions,
+             partition_mode=p.partition_mode,
              partition_memo=len(p._partition_memo),
              **{**p.stats,
                 "device_chunks": dict(p.stats["device_chunks"]),

@@ -685,8 +685,12 @@ class CensusService:
         mixed-analytic split); buckets serving a partitioned plan
         (``CensusConfig(partitions > 1)``) additionally report
         ``partitions`` and ``partition`` — the last executed shard
-        layout: cuts, per-shard dyad counts, halo sizes, and the spill
-        staging footprint (see :mod:`repro.engine.partition`).  ``mean_batch`` is the fleet-wide average
+        layout and its concurrency: cuts, per-shard dyad counts, halo
+        sizes, the spill staging footprint, plus the residency
+        observables (``mode``, ``h2d_puts`` / ``d2d_puts`` transfer
+        counts, ``max_shard_bytes``, per-shard ``shard_times`` and the
+        ``shard_overlap`` concurrency fraction — see
+        :mod:`repro.engine.partition`).  ``mean_batch`` is the fleet-wide average
         batch width — the dispatch amortization factor actually achieved.
         ``devices`` maps executor pool device index → chunks the service
         dispatched there across all batches (all on device 0 under the

@@ -395,3 +395,229 @@ print('OK')
                        capture_output=True, text=True, timeout=600)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "OK" in r.stdout
+
+
+# ----------------------------------------------------------------------------
+# partition_mode: validation, cache-key normalization, explicit-mode identity
+# ----------------------------------------------------------------------------
+
+def test_partition_mode_validation_messages():
+    with pytest.raises(ValueError, match=r"'serial', 'pool', 'mesh'"):
+        EngineConfig(partitions=2, partition_mode="parallel")
+    with pytest.raises(ValueError, match="requires partitions > 1"):
+        EngineConfig(partition_mode="pool")
+    with pytest.raises(ValueError, match="requires partitions > 1"):
+        EngineConfig(partitions=1, partition_mode="serial")
+    g = _graph(33, n=16, m=40)
+    with pytest.raises(ValueError, match="mesh"):
+        compile(g, ("triad_census",),
+                EngineConfig(backend="xla", partitions=2,
+                             partition_mode="mesh"))
+    with pytest.raises(ValueError, match="pool"):
+        compile(g, ("triad_census",),
+                EngineConfig(backend="distributed", partitions=2,
+                             partition_mode="pool"))
+
+
+def test_partition_mode_cache_key_normalization():
+    g = _graph(35, n=16, m=40)
+    # None resolves to the backend default and shares its plan entry
+    default = compile(g, ("triad_census",),
+                      EngineConfig(backend="xla", partitions=2))
+    explicit = compile(g, ("triad_census",),
+                       EngineConfig(backend="xla", partitions=2,
+                                    partition_mode="pool"))
+    assert default is explicit
+    assert default.partition_mode == "pool"
+    # a different mode is a different plan
+    serial = compile(g, ("triad_census",),
+                     EngineConfig(backend="xla", partitions=2,
+                                  partition_mode="serial"))
+    assert serial is not default
+    assert serial.partition_mode == "serial"
+    # spill defaults the mode to serial (one resident shard at a time)
+    spilled = compile(g, ("triad_census",),
+                      EngineConfig(backend="xla", partitions=2, spill=True))
+    assert spilled.partition_mode == "serial"
+    entry = plan_cache_stats()["entries"][-1]
+    assert entry["partition_mode"] == "serial"
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_partition_mode_explicit_bit_identity(backend):
+    g = _graph(37, n=40, m=260)
+    base = compile(g, ALL_OPS, EngineConfig(backend=backend)).run_raw(g)
+    modes = (("mesh", "serial") if backend == "distributed"
+             else ("pool", "serial"))
+    for mode in modes:
+        plan = compile(g, ALL_OPS,
+                       EngineConfig(backend=backend, partitions=4,
+                                    partition_mode=mode))
+        s0 = plan.stats["host_syncs"]
+        raw = plan.run_raw(g)
+        assert np.array_equal(raw, base), (backend, mode)
+        assert plan.stats["host_syncs"] - s0 == 1
+        ps = plan.stats["partition"]
+        assert ps["mode"] == mode
+
+
+def test_partition_staging_hoisted_once_per_shard():
+    # satellite regression: context staging happens exactly ONCE per
+    # non-empty shard — never per chunk, never per worker — on both the
+    # serial rung and the (single-device degenerate) pool.
+    g = _graph(39, n=48, m=300)
+    for mode in ("serial", "pool"):
+        plan = compile(g, ("triad_census",),
+                       EngineConfig(backend="xla", partitions=4,
+                                    chunk_dyads=16, partition_mode=mode))
+        plan.run(g)
+        ps = plan.stats["partition"]
+        nonempty = sum(1 for d in ps["shard_dyads"] if d)
+        assert ps["h2d_puts"] == nonempty, (mode, ps["h2d_puts"], nonempty)
+        assert set(ps["shard_times"]) == {
+            s for s, d in enumerate(ps["shard_dyads"]) if d}
+        for t in ps["shard_times"].values():
+            assert t["end"] >= t["start"] and t["tasks"] >= 1
+        assert 0.0 <= ps["shard_overlap"] <= 1.0
+        # chunks dispatched == chunks folded, per device
+        assert (sum(plan.stats["device_chunks"].values())
+                == plan.stats["chunks"])
+
+
+def test_partition_observables_in_plan_cache_stats():
+    g = _graph(41)
+    plan = compile(g, ("triad_census",),
+                   EngineConfig(backend="xla", partitions=4))
+    plan.run(g)
+    entry = plan_cache_stats()["entries"][-1]
+    ps = entry["partition"]
+    assert ps["mode"] == entry["partition_mode"]
+    for key in ("h2d_puts", "d2d_puts", "max_shard_bytes",
+                "shard_overlap", "shard_times"):
+        assert key in ps, key
+    from repro.engine.partition import full_context_bytes
+    # pow2 bucket rounding can equalize them on tiny graphs; the strict
+    # ~P-fold drop is pinned by the benchmark on a locality-rich graph.
+    assert 0 < ps["max_shard_bytes"] <= full_context_bytes(plan)
+
+
+# ----------------------------------------------------------------------------
+# device-side halo exchange: routing metadata + assembled-array identity
+# ----------------------------------------------------------------------------
+
+def test_halo_by_owner_groups_are_owner_contiguous():
+    from repro.core.partition import halo_by_owner
+    g = _graph(43, n=64, m=400)
+    part = partition_graph(g, 4)
+    for shard in part.shards:
+        groups = halo_by_owner(part.cuts, shard.halo)
+        rebuilt = np.concatenate([ids for _, ids in groups]) if groups \
+            else np.empty(0, dtype=np.int64)
+        assert np.array_equal(rebuilt, shard.halo)  # nothing lost/reordered
+        owners = [o for o, _ in groups]
+        assert owners == sorted(set(owners))  # one contiguous run per owner
+        for o, ids in groups:
+            assert o != shard.index  # halo rows are remote by construction
+            lo, hi = int(part.cuts[o]), int(part.cuts[o + 1])
+            assert ((ids >= lo) & (ids < hi)).all()
+
+
+def test_pool_staging_assembles_exact_local_arrays():
+    # the pool path's device-assembled shard context (ptr staging + owned
+    # block scatter + per-owner halo exchange) must equal the host-built
+    # serial context BIT FOR BIT — this is what makes pool/serial/p1
+    # interchangeable.
+    from repro.engine.partition import (_Geometry, _exchange_halos,
+                                        _finish_pool_context, _shard_arrays,
+                                        _stage_pool_shard, plan_partition)
+    g = _graph(45, n=64, m=400)
+    for backend in ("xla", "pallas"):
+        plan = compile(g, ("triad_census",),
+                       EngineConfig(backend=backend, partitions=4,
+                                    partition_mode="pool"))
+        part = plan_partition(plan, g)
+        geom = _Geometry(plan, part)
+        dev = plan.executor.devices[0]
+        pstats = {"d2d_puts": 0}
+        work = {}
+        for shard in part.shards:
+            if shard.n_dyads == 0:
+                continue
+            u, v = shard_dyads(g, shard.lo, shard.hi)
+            work[shard.index] = _stage_pool_shard(plan, g, shard, geom,
+                                                  u, v, dev)
+        _exchange_halos(plan, g, part, work, pstats)
+        for s, w in work.items():
+            arrays, _n, _du, _dv = _finish_pool_context(plan, w)
+            want = _shard_arrays(plan, g, part.shards[s], geom)
+            for field in ("out_ptr", "out_idx", "nbr_ptr", "nbr_idx",
+                          "nbr_deg", "in_ptr", "in_idx"):
+                a, b = getattr(arrays, field), getattr(want, field)
+                if b is None:
+                    assert a is None, (backend, field)
+                    continue
+                assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                    (backend, s, field)
+
+
+# ----------------------------------------------------------------------------
+# concurrent pool over 8 forced host devices (subprocess)
+# ----------------------------------------------------------------------------
+
+def test_concurrent_pool_over_forced_device_pool():
+    code = """
+import numpy as np, jax
+assert len(jax.devices()) == 8
+from repro.core import brute_force_census, generators
+from repro.engine import EngineConfig, FaultPlan, compile
+g = generators.rmat(7, edge_factor=4, seed=11)
+want = brute_force_census(g).counts
+base = compile(g, ("triad_census",), EngineConfig(backend="xla")).run_raw(g)
+# concurrent residency: every shard staged once, halos exchanged
+# device-to-device, >= 2 shards in flight at once, one sync.
+plan = compile(g, ("triad_census",),
+               EngineConfig(backend="xla", partitions=8, batch=16,
+                            chunk_dyads=16, schedule="dynamic"))
+assert plan.partition_mode == "pool"
+s0 = plan.stats["host_syncs"]
+raw = plan.run_raw(g)
+assert plan.stats["host_syncs"] - s0 == 1
+assert np.array_equal(raw, base)
+ps = plan.stats["partition"]
+nonempty = sum(1 for d in ps["shard_dyads"] if d)
+assert ps["mode"] == "pool"
+assert ps["h2d_puts"] == nonempty, ps
+assert ps["d2d_puts"] > 0, ps
+assert ps["shard_overlap"] > 0.0, ps
+assert len(plan.stats["device_chunks"]) > 1
+assert sum(plan.stats["device_chunks"].values()) == plan.stats["chunks"]
+# device loss mid-run: the dead home's shards re-home onto survivors,
+# their contexts re-stage, and the result stays bit-identical in one
+# sync.  The loss is a thread race (the dead worker must win a task),
+# so re-run the warm plan until it lands.
+lossy = compile(g, ("triad_census",),
+                EngineConfig(backend="xla", partitions=8, batch=16,
+                             chunk_dyads=16, schedule="dynamic",
+                             fault_plan=FaultPlan(seed=5,
+                                                  device_loss=(3,))))
+runs = 0
+for _ in range(8):
+    raw = lossy.run_raw(g)
+    runs += 1
+    assert np.array_equal(raw, base)
+    if lossy.stats["faults"]["device_losses"]:
+        break
+fs = lossy.stats["faults"]
+assert fs["device_losses"] >= 1 and fs["quarantines"] >= 1, fs
+assert lossy.stats["partition"].get("rehomes", 0) >= 1
+assert lossy.stats["host_syncs"] == runs
+print('OK')
+"""
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": SRC}
+    env.pop("REPRO_FAULT_PLAN", None)
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout
